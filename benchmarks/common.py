@@ -1,0 +1,60 @@
+"""Shared fixtures for the per-table benchmarks: the paper's evaluation
+models (§4.1) as Transformer-IR configs, and CSV output helpers."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ir_from_hf_config
+
+# The paper's four evaluation models (§4.1) + Fig. 8's scaling set.
+PAPER_MODELS = {
+    "llama-3.1-70b": dict(hidden_size=8192, num_hidden_layers=80,
+                          num_attention_heads=64, num_key_value_heads=8,
+                          intermediate_size=28672, vocab_size=128256),
+    "llama-3.1-405b": dict(hidden_size=16384, num_hidden_layers=126,
+                           num_attention_heads=128, num_key_value_heads=8,
+                           intermediate_size=53248, vocab_size=128256),
+    "mistral-large-123b": dict(hidden_size=12288, num_hidden_layers=88,
+                               num_attention_heads=96,
+                               num_key_value_heads=8,
+                               intermediate_size=28672,
+                               vocab_size=32768),
+    "mixtral-8x22b": dict(hidden_size=6144, num_hidden_layers=56,
+                          num_attention_heads=48, num_key_value_heads=8,
+                          intermediate_size=16384, num_local_experts=8,
+                          num_experts_per_tok=2,
+                          moe_intermediate_size=16384, vocab_size=32000),
+    "qwen2.5-32b": dict(hidden_size=5120, num_hidden_layers=64,
+                        num_attention_heads=40, num_key_value_heads=8,
+                        intermediate_size=27648, vocab_size=152064),
+}
+
+
+def model_ir(name: str):
+    return ir_from_hf_config(PAPER_MODELS[name], name=name)
+
+
+def trillion_scale_ir():
+    """The paper's Fig. 8 synthetic trillion-parameter model: Llama-70B
+    scaled 16x via its config file."""
+    cfg = dict(PAPER_MODELS["llama-3.1-70b"])
+    cfg["hidden_size"] *= 4            # 16x params ~ 4x width
+    cfg["intermediate_size"] *= 4
+    cfg["num_attention_heads"] *= 4
+    return ir_from_hf_config(cfg, name="llama-1.1T")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

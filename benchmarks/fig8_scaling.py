@@ -1,0 +1,40 @@
+"""Fig. 8 reproduction — simulation overhead stays flat from billion- to
+trillion-scale models (the Transformer-IR block extrapolation claim)."""
+
+from __future__ import annotations
+
+from repro.core import ApexSearch, get_trace, h100_multinode
+
+from .common import Timer, csv_row, model_ir, trillion_scale_ir
+
+
+def run(quick: bool = False):
+    names = ["qwen2.5-32b", "llama-3.1-70b", "mistral-large-123b",
+             "llama-3.1-405b"]
+    models = [(n, model_ir(n)) for n in (names[:2] if quick else names)]
+    if not quick:
+        models.append(("llama-1.1T", trillion_scale_ir()))
+    cluster = h100_multinode(4)           # 32 GPUs so the 1T model fits
+    reqs = get_trace("chat", arrival_rate=8.0, num_requests=48)
+    rows = []
+    for name, model in models:
+        search = ApexSearch(model, cluster)
+        with Timer() as t:
+            res = search.search(reqs, max_model_dp=4)
+        rows.append(dict(model=name,
+                         params_b=model.total_params() / 1e9,
+                         sim_seconds=t.seconds,
+                         schemes=res.num_schemes))
+        csv_row(f"fig8/{name}", t.seconds * 1e6,
+                f"params={model.total_params() / 1e9:.0f}B "
+                f"schemes={res.num_schemes} sim={t.seconds:.2f}s")
+    if len(rows) >= 2:
+        ratio = rows[-1]["sim_seconds"] / max(rows[0]["sim_seconds"], 1e-9)
+        csv_row("fig8/overhead_ratio_1T_vs_32B", ratio * 1e6,
+                f"{ratio:.2f}x sim-time for "
+                f"{rows[-1]['params_b'] / rows[0]['params_b']:.0f}x params")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 9 reproduction — max-batch-size sweeps for SLO tuning: TPOT
+improves as the cap shrinks until over-restriction degrades end-to-end
+latency."""
+
+from __future__ import annotations
+
+from repro.core import ApexSearch, BatchingPolicy, get_trace, h100_node
+
+from .common import csv_row, model_ir
+
+CAPS = (4, 8, 16, 32, None)
+
+
+def run(quick: bool = False):
+    rows = []
+    models = ["llama-3.1-70b"] if quick else ["llama-3.1-70b",
+                                              "mistral-large-123b"]
+    cluster = h100_node(8)
+    reqs = get_trace("creation", arrival_rate=6.0, num_requests=64)
+    for name in models:
+        model = model_ir(name)
+        search = ApexSearch(model, cluster)
+        for cap in (CAPS[:3] if quick else CAPS):
+            rep = search.evaluate_baseline(
+                reqs, policy=BatchingPolicy(max_batch_size=cap))
+            rows.append(dict(model=name, cap=cap,
+                             tpot_ms=rep.tpot_mean * 1e3,
+                             e2e_s=rep.e2e_latency))
+            csv_row(f"fig9/{name}/cap{cap or 'inf'}",
+                    rep.tpot_mean * 1e6,
+                    f"TPOT={rep.tpot_mean * 1e3:.2f}ms "
+                    f"e2e={rep.e2e_latency:.0f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

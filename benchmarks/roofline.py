@@ -1,0 +1,94 @@
+"""§Roofline analysis: three-term roofline per (arch x shape) on the
+single-pod mesh, derived from the compiled dry-run artifacts.
+
+Terms (TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI):
+    compute    = per-device dot FLOPs (loop-corrected HLO) / peak
+    memory     = per-device HBM traffic / bandwidth, where traffic =
+                 argument bytes (params+opt+cache, each read >= once per
+                 step) + analytic activation workspace
+    collective = per-device collective bytes (loop-corrected HLO) / link bw
+
+MODEL_FLOPS = 6*N*D (train, dense), 6*N_active*D (MoE), 2*N*D (prefill),
+2*N_active*B (decode, per step); the MODEL/HLO ratio exposes redundant
+compute (dense MoE dispatch, replicated attention, remat).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs as C
+from repro.launch.shapes import SHAPES
+
+from .common import csv_row
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops(arch: str, shape) -> float:
+    cfg = C.get_config(arch)
+    ir = cfg.to_ir()
+    n_total = ir.total_params()
+    # active params per token (MoE discount)
+    if cfg.ffn_kind == "moe":
+        from repro.core.ir import MoECell
+        moe_total = sum(c.weight_params() for c in ir.block.cells
+                        if isinstance(c, MoECell)) * ir.block.repeat
+        active_frac = (cfg.top_k + cfg.n_shared) / max(
+            cfg.n_routed + cfg.n_shared, 1)
+        n_active = n_total - moe_total * (1 - active_frac)
+    else:
+        n_active = n_total
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B              # decode: one token per sequence
+
+
+def analyze(dryrun_path: str = "results/dryrun.json",
+            mesh: str = "16x16", quick: bool = False):
+    if not os.path.exists(dryrun_path):
+        print(f"(roofline: {dryrun_path} missing — run "
+              "python -m repro.launch.dryrun first)")
+        return []
+    recs = [r for r in json.load(open(dryrun_path))
+            if r.get("status") == "ok" and r["mesh"] == mesh]
+    rows = []
+    for r in recs:
+        shape = SHAPES[r["shape"]]
+        n_dev = r["devices"]
+        t_c = r["dot_flops"] / PEAK
+        traffic = (r["memory"]["argument_size_in_bytes"]
+                   + r.get("workspace_model", 0))
+        t_m = traffic / HBM
+        coll = sum(r["collective_bytes"].values())
+        t_x = coll / ICI
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+        mf = model_flops(r["arch"], shape)
+        hlo_total = r["dot_flops"] * n_dev
+        ratio = mf / hlo_total if hlo_total else 0.0
+        rows.append(dict(arch=r["arch"], shape=r["shape"],
+                         compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                         dominant=dom[1], model_flops=mf,
+                         hlo_flops=hlo_total, useful_ratio=ratio,
+                         step_s=max(t_c, t_m, t_x),
+                         roofline_frac=min(1.0, max(t_c, t_m) /
+                                           max(t_c, t_m, t_x))))
+        csv_row(f"roofline/{r['arch']}/{r['shape']}",
+                max(t_c, t_m, t_x) * 1e6,
+                f"dom={dom[1]} c={t_c * 1e3:.2f}ms m={t_m * 1e3:.2f}ms "
+                f"x={t_x * 1e3:.2f}ms useful={ratio:.2f}")
+    return rows
+
+
+def run(quick: bool = False):
+    return analyze(quick=quick)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the
+complete settings (the EXPERIMENTS.md numbers); default is the quick
+variant for CI-style validation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (table2,fig6,...)")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from . import (fig6_fidelity, fig7_scaling, fig8_scaling, fig9_slo,
+                   roofline, table2_plan_search, table3_clusters,
+                   table4_energy, table5_extensibility)
+
+    benches = {
+        "table2": lambda: table2_plan_search.run(quick=quick),
+        "table3": lambda: table3_clusters.run(quick=quick),
+        "table4": lambda: table4_energy.run(quick=quick),
+        "table5": lambda: table5_extensibility.run(quick=quick),
+        "fig6": lambda: fig6_fidelity.run(quick=quick),
+        "fig7": lambda: fig7_scaling.run(quick=quick),
+        "fig8": lambda: fig8_scaling.run(quick=quick),
+        "fig9": lambda: fig9_slo.run(quick=quick),
+        "roofline": lambda: roofline.run(quick=quick),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{name},0,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

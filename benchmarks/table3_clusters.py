@@ -1,0 +1,40 @@
+"""Table 3 reproduction: multi-node H100 (Llama-405B) + H200 cluster
+(70B / Mistral-Large / Mixtral) — APEX Optimal vs baseline per trace."""
+
+from __future__ import annotations
+
+from repro.core import ApexSearch, get_trace, h100_multinode, h200_node
+
+from .common import Timer, csv_row, model_ir
+
+TRACES = [("summarization", 3.0), ("creation", 6.0), ("chat", 16.0)]
+
+
+def run(num_requests: int = 64, quick: bool = False):
+    rows = []
+    cases = [("llama-3.1-405b", h100_multinode(2), "h100x16")]
+    if not quick:
+        cases += [(m, h200_node(8), "h200x8")
+                  for m in ("llama-3.1-70b", "mistral-large-123b",
+                            "mixtral-8x22b")]
+    for name, cluster, cname in cases:
+        model = model_ir(name)
+        search = ApexSearch(model, cluster)
+        for trace, rate in (TRACES[:1] if quick else TRACES):
+            reqs = get_trace(trace, arrival_rate=rate,
+                             num_requests=num_requests)
+            with Timer() as t:
+                base = search.evaluate_baseline(reqs)
+                full = search.search(reqs)
+            sp = base.e2e_latency / full.best.e2e_latency
+            rows.append(dict(model=name, cluster=cname, trace=trace,
+                             baseline_s=base.e2e_latency,
+                             apex_s=full.best.e2e_latency, speedup=sp,
+                             plan=full.best.plan_label))
+            csv_row(f"table3/{name}/{cname}/{trace}", t.seconds * 1e6,
+                    f"apex={sp:.2f}x plan={full.best.plan_label}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Table 4 reproduction: latency-optimal vs energy-optimal plans, and
+energy-optimal at reduced GPU frequency (0.8 GHz) — energy, TTFT, TPOT."""
+
+from __future__ import annotations
+
+from repro.core import ApexSearch, get_trace, h100_node
+
+from .common import Timer, csv_row, model_ir
+
+
+def run(num_requests: int = 64, quick: bool = False):
+    cluster = h100_node(8)
+    model = model_ir("llama-3.1-70b")
+    rows = []
+    traces = [("summarization", 3.0)] if quick else \
+        [("summarization", 3.0), ("creation", 6.0)]
+    for trace, rate in traces:
+        reqs = get_trace(trace, arrival_rate=rate,
+                         num_requests=num_requests)
+        variants = {}
+        with Timer() as t:
+            s_full = ApexSearch(model, cluster)
+            variants["latency_opt_2.0GHz"] = s_full.search(
+                reqs, objective="latency").best
+            variants["energy_opt_2.0GHz"] = s_full.search(
+                reqs, objective="energy").best
+            s_slow = ApexSearch(model, cluster, freq_ghz=0.8)
+            variants["energy_opt_0.8GHz"] = s_slow.search(
+                reqs, objective="energy").best
+        base_e = variants["latency_opt_2.0GHz"].total_energy
+        for vname, rep in variants.items():
+            rows.append(dict(trace=trace, variant=vname,
+                             energy_kj=rep.total_energy / 1e3,
+                             ttft_ms=rep.ttft_mean * 1e3,
+                             tpot_ms=rep.tpot_mean * 1e3,
+                             savings=1 - rep.total_energy / base_e))
+            csv_row(f"table4/{trace}/{vname}", t.seconds * 1e6 / 3,
+                    f"energy={rep.total_energy / 1e3:.2f}kJ "
+                    f"save={1 - rep.total_energy / base_e:+.0%} "
+                    f"TTFT={rep.ttft_mean * 1e3:.0f}ms "
+                    f"TPOT={rep.tpot_mean * 1e3:.1f}ms")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Quickstart: find the optimal parallel execution plan for serving
+Llama-3.1-70B on an 8xH100 node (the paper's §3.1 walkthrough).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import ApexSearch, get_trace, h100_node, ir_from_hf_config
+
+# 1) the model — a HuggingFace-style config dict is all APEX needs
+llama70b = ir_from_hf_config(dict(
+    hidden_size=8192, num_hidden_layers=80, num_attention_heads=64,
+    num_key_value_heads=8, intermediate_size=28672, vocab_size=128256,
+), name="llama-3.1-70b")
+print(llama70b.describe())
+
+# 2) the cluster and the workload (Poisson arrivals, chat-style lengths)
+cluster = h100_node(8)
+print(cluster.describe())
+requests = get_trace("chat", arrival_rate=16.0, num_requests=128)
+
+# 3) search: baseline heuristic vs feasible-optimal vs APEX-optimal
+search = ApexSearch(llama70b, cluster)
+baseline = search.evaluate_baseline(requests)
+print(f"\nbaseline  {baseline.summary()}")
+
+feasible = search.search(requests, feasible_only=True)
+print(f"feasible  {feasible.best.summary()}")
+
+full = search.search(requests, feasible_only=False)
+print(f"apex      {full.best.summary()}")
+print(f"\nsearched {full.num_schemes} plans in {full.search_seconds:.1f}s "
+      f"({full.num_feasible} feasible)")
+print(f"speedup vs baseline: feasible "
+      f"{baseline.e2e_latency / feasible.best.e2e_latency:.2f}x, "
+      f"apex {baseline.e2e_latency / full.best.e2e_latency:.2f}x")
+
+print("\ntop-5 plans by end-to-end latency:")
+for rep in full.top(5):
+    print("  ", rep.summary())

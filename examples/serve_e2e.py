@@ -1,0 +1,19 @@
+"""End-to-end serving driver (the paper's kind of system): APEX picks the
+plan for the full architecture, then the REAL JAX engine serves a batched
+request stream with the reduced config on this host — iteration-level
+batching, greedy admission, preemption and all.
+
+    PYTHONPATH=src python examples/serve_e2e.py [--arch mixtral-8x7b]
+"""
+
+import argparse
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--trace", default="chat")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    serve(args.arch, args.trace, args.requests)

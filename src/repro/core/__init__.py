@@ -1,0 +1,39 @@
+"""APEX core — the paper's contribution: automated parallel execution
+planning for LLM serving via dynamism-aware simulation."""
+
+from .batching import BatchingModule, BatchingPolicy, BatchingResult
+from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
+                      cpu_local, get_cluster, h100_multinode, h100_node,
+                      h200_node, tpu_v5e_multipod, tpu_v5e_pod)
+from .ir import (AttentionCell, Block, Cell, CrossAttentionCell, MLACell,
+                 MLPCell, ModelIR, MoECell, OpCall, SSMCell, Workload,
+                 ir_from_hf_config)
+from .mapper import ExecutionPlan, assign_physical_ids, map_scheme
+from .planner import (ParallelScheme, divisors, generate_schemes,
+                      heuristic_scheme)
+from .profiles import AnalyticBackend, CollectiveModel, MeasuredBackend, \
+    ProfileBackend, ProfileStore
+from .quant import FORMATS, QuantFormat, get_format, register_format
+from .search import ApexSearch, SearchResult, compare_three_plans
+from .simulator import PlanSimulator, SimulationReport
+from .templates import CellScheme, CollectiveCall, reshard_collectives, \
+    schemes_for_cell
+from .trace import Request, TRACE_SPECS, get_trace, synthesize_trace, \
+    trace_stats
+
+__all__ = [
+    "ApexSearch", "AnalyticBackend", "AttentionCell", "BatchingModule",
+    "BatchingPolicy", "BatchingResult", "Block", "Cell", "CellScheme",
+    "CLUSTER_PRESETS", "Cluster", "CollectiveCall", "CollectiveModel",
+    "CrossAttentionCell", "DeviceSpec", "ExecutionPlan", "FORMATS",
+    "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
+    "NetworkLevel", "OpCall", "cpu_local",
+    "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
+    "QuantFormat", "Request", "SSMCell", "SearchResult", "SimulationReport",
+    "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
+    "divisors", "generate_schemes", "get_cluster", "get_format", "get_trace",
+    "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
+    "ir_from_hf_config", "map_scheme", "register_format",
+    "reshard_collectives", "schemes_for_cell", "synthesize_trace",
+    "tpu_v5e_multipod", "tpu_v5e_pod", "trace_stats",
+]

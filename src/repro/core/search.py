@@ -1,0 +1,160 @@
+"""Automated parallel-execution search — APEX's top-level workflow (Fig. 2).
+
+Given (model IR, cluster, request trace):
+  1. generate parallel schemes (planner.py, Algorithm 1),
+  2. map each to physical devices (mapper.py),
+  3. simulate serving the trace under iteration-level batching
+     (batching.py + simulator.py),
+  4. rank by a parameterizable objective — latency, energy, or
+     SLO-constrained (paper §3.1: "APEX can optimize towards different
+     objectives ... based on a parametrizable target metric").
+
+Also provides the paper's three comparison points (§4.2): the heuristic
+baseline plan, the Feasible Optimal (no cell-level DP / heterogeneous
+sharding), and the unconstrained APEX Optimal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, List, Optional, Sequence
+
+from .batching import BatchingPolicy
+from .cluster import Cluster
+from .ir import ModelIR
+from .mapper import ExecutionPlan, map_scheme
+from .planner import ParallelScheme, generate_schemes, heuristic_scheme
+from .profiles import AnalyticBackend, CollectiveModel, ProfileBackend, \
+    ProfileStore
+from .simulator import PlanSimulator, SimulationReport
+from .trace import Request
+
+
+Objective = Callable[[SimulationReport], float]
+
+OBJECTIVES = {
+    "latency": lambda r: r.e2e_latency,
+    "energy": lambda r: r.total_energy,
+    "ttft": lambda r: r.ttft_p95,
+    "tpot": lambda r: r.tpot_p95,
+}
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: SimulationReport
+    best_plan: ExecutionPlan
+    all_reports: List[SimulationReport]
+    num_schemes: int
+    num_feasible: int
+    search_seconds: float
+
+    def top(self, k: int = 5) -> List[SimulationReport]:
+        return sorted((r for r in self.all_reports if r.feasible),
+                      key=lambda r: r.e2e_latency)[:k]
+
+
+class ApexSearch:
+    """One search context: model + cluster + profiling backend."""
+
+    def __init__(self, model: ModelIR, cluster: Cluster,
+                 backend: Optional[ProfileBackend] = None,
+                 freq_ghz: Optional[float] = None,
+                 grid_stride: int = 1):
+        self.model = model
+        self.cluster = cluster
+        self.backend = backend or AnalyticBackend(cluster, freq_ghz=freq_ghz)
+        self.store = ProfileStore(self.backend, grid_stride=grid_stride)
+        self.coll = CollectiveModel(cluster, freq_ghz=freq_ghz)
+
+    # -- single-plan evaluation -------------------------------------------------
+
+    def evaluate(self, scheme: ParallelScheme, requests: Sequence[Request],
+                 policy: Optional[BatchingPolicy] = None,
+                 keep_records: bool = False) -> SimulationReport:
+        plan = map_scheme(scheme, self.cluster)
+        sim = PlanSimulator(plan, self.store, self.coll)
+        return sim.simulate(requests, policy=policy,
+                            keep_records=keep_records)
+
+    def evaluate_baseline(self, requests: Sequence[Request],
+                          quant: str = "fp16",
+                          policy: Optional[BatchingPolicy] = None
+                          ) -> SimulationReport:
+        """The heuristic plan: TP in-node, PP across nodes (paper §4.2)."""
+        scheme = heuristic_scheme(self.model, self.cluster.num_devices,
+                                  cluster=self.cluster, quant=quant)
+        return self.evaluate(scheme, requests, policy=policy)
+
+    # -- full search --------------------------------------------------------------
+
+    def search(self, requests: Sequence[Request],
+               objective: str = "latency",
+               quant: str = "fp16",
+               feasible_only: bool = False,
+               policy: Optional[BatchingPolicy] = None,
+               max_model_dp: Optional[int] = None,
+               slo_ttft_s: Optional[float] = None,
+               slo_tpot_s: Optional[float] = None,
+               progress: Optional[Callable[[int, int], None]] = None
+               ) -> SearchResult:
+        t0 = _time.perf_counter()
+        obj = OBJECTIVES[objective]
+        schemes = generate_schemes(self.model, self.cluster.num_devices,
+                                   quant=quant,
+                                   allow_cell_dp=not feasible_only,
+                                   max_model_dp=max_model_dp)
+        if feasible_only:
+            schemes = [s for s in schemes
+                       if s.is_feasible_for_current_systems()]
+        # cheap static pre-filter: drop plans whose weights alone overflow
+        cap = self.cluster.device.hbm_bytes * 0.92
+        schemes = [s for s in schemes if s.weight_bytes_per_device() < cap]
+
+        reports: List[SimulationReport] = []
+        best: Optional[SimulationReport] = None
+        best_plan: Optional[ExecutionPlan] = None
+        for i, scheme in enumerate(schemes):
+            plan = map_scheme(scheme, self.cluster)
+            sim = PlanSimulator(plan, self.store, self.coll)
+            rep = sim.simulate(requests, policy=policy)
+            reports.append(rep)
+            if progress:
+                progress(i + 1, len(schemes))
+            if not rep.feasible:
+                continue
+            if slo_ttft_s is not None and rep.ttft_p95 > slo_ttft_s:
+                continue
+            if slo_tpot_s is not None and rep.tpot_p95 > slo_tpot_s:
+                continue
+            if best is None or obj(rep) < obj(best):
+                best, best_plan = rep, plan
+        if best is None:
+            raise RuntimeError(
+                "no feasible plan found (memory or SLO constraints too "
+                f"tight) among {len(schemes)} schemes")
+        return SearchResult(best=best, best_plan=best_plan,
+                            all_reports=reports, num_schemes=len(schemes),
+                            num_feasible=sum(r.feasible for r in reports),
+                            search_seconds=_time.perf_counter() - t0)
+
+
+def compare_three_plans(model: ModelIR, cluster: Cluster,
+                        requests: Sequence[Request], quant: str = "fp16",
+                        policy: Optional[BatchingPolicy] = None) -> dict:
+    """Reproduce a Table-2 row: baseline vs Feasible Optimal vs APEX Optimal."""
+    search = ApexSearch(model, cluster)
+    base = search.evaluate_baseline(requests, quant=quant, policy=policy)
+    feas = search.search(requests, quant=quant, feasible_only=True,
+                         policy=policy)
+    full = search.search(requests, quant=quant, feasible_only=False,
+                         policy=policy)
+    return {
+        "baseline": base,
+        "feasible_optimal": feas.best,
+        "apex_optimal": full.best,
+        "feasible_speedup": base.e2e_latency / feas.best.e2e_latency,
+        "apex_speedup": base.e2e_latency / full.best.e2e_latency,
+        "search": full,
+    }

@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic token streams + request traces."""
+
+from .pipeline import TokenPipeline
+from .requests import make_serving_requests
+
+__all__ = ["TokenPipeline", "make_serving_requests"]

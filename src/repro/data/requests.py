@@ -1,0 +1,29 @@
+"""Serving-request synthesis for the REAL engine (mirrors core/trace.py's
+simulator traces so fidelity experiments compare like for like)."""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.trace import Request, TRACE_SPECS, synthesize_trace
+
+
+def make_serving_requests(trace: str, arrival_rate: float, n: int,
+                          vocab_size: int, seed: int = 0,
+                          max_len: int = 2048) -> List[dict]:
+    """Concrete requests: APEX trace metadata + actual prompt token ids."""
+    reqs = synthesize_trace(TRACE_SPECS[trace], arrival_rate, seed=seed,
+                            num_requests=n, max_len=max_len)
+    rng = np.random.RandomState(seed + 1)
+    out = []
+    for r in reqs:
+        out.append({
+            "rid": r.rid,
+            "arrival": r.arrival,
+            "prompt": rng.randint(1, vocab_size,
+                                  size=(r.context_len,)).astype(np.int32),
+            "gen_len": r.gen_len,
+        })
+    return out

@@ -1,0 +1,21 @@
+"""Public decode-attention op with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray,
+                     force_kernel: bool = False) -> jnp.ndarray:
+    if jax.default_backend() == "tpu":
+        return decode_attention_pallas(q, k, v, lengths, interpret=False)
+    if force_kernel or os.environ.get("REPRO_KERNELS") == "1":
+        return decode_attention_pallas(q, k, v, lengths, interpret=True)
+    return decode_attention_ref(q, k, v, lengths)

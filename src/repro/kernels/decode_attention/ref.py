@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Hq, D); k/v: (B, Smax, Hkv, Dv); lengths: (B,).
+    Returns (B, Hq, Dv)."""
+    B, Hq, D = q.shape
+    _, Smax, Hkv, Dv = v.shape
+    rep = Hq // Hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Public flash-attention op: kernel on TPU, blockwise-jnp elsewhere.
+
+The dispatch ladder:
+  * TPU backend            -> Pallas kernel, compiled (interpret=False)
+  * CPU + REPRO_KERNELS=1  -> Pallas kernel, interpret mode (tests)
+  * otherwise              -> repro.layers.attention.blockwise_attention
+                              (same math, plain XLA — what the dry-run
+                              lowers so the HLO reflects TPU-lowerable ops)
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import blockwise_attention
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0,
+                    force_kernel: bool = False) -> jnp.ndarray:
+    if _on_tpu():
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, interpret=False)
+    if force_kernel or os.environ.get("REPRO_KERNELS") == "1":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, interpret=True)
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel: materializes the full
+score matrix.  Small-shape tests only."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, Dv) -> (B, Sq, Hq, Dv)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    rep = Hq // Hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import fused_rms_norm
+
+__all__ = ["fused_rms_norm"]

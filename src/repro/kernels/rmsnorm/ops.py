@@ -1,0 +1,21 @@
+"""Public fused-RMSNorm op with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .rmsnorm import rms_norm_pallas
+from .ref import rms_norm_ref
+
+
+def fused_rms_norm(x: jnp.ndarray, w: jnp.ndarray,
+                   eps: float = 1e-6,
+                   force_kernel: bool = False) -> jnp.ndarray:
+    if jax.default_backend() == "tpu":
+        return rms_norm_pallas(x, w, eps=eps, interpret=False)
+    if force_kernel or os.environ.get("REPRO_KERNELS") == "1":
+        return rms_norm_pallas(x, w, eps=eps, interpret=True)
+    return rms_norm_ref(x, w, eps)

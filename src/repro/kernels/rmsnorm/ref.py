@@ -1,0 +1,5 @@
+"""Oracle: the canonical rms_norm from repro.layers.norms."""
+
+from repro.layers.norms import rms_norm as rms_norm_ref
+
+__all__ = ["rms_norm_ref"]

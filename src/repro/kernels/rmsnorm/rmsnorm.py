@@ -1,0 +1,51 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Trivial compute, pure bandwidth: one pass over the rows, fp32 accumulation
+on the VPU, scale by the weight vector, cast back.  Grid tiles rows into
+(block_rows, d) VMEM panels; d stays whole (norm axis must be resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                   # (rows, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def rms_norm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+                    block_rows: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """x: (..., d) -> same shape; w: (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    rows_p = -(-rows // br) * br
+    if rows_p != rows:
+        x2 = jnp.pad(x2, ((0, rows_p - rows), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows_p // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,25 @@
+"""Public SSD-scan op with kernel/ref dispatch (adds the D-skip term)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+             chunk: int = 128, force_kernel: bool = False) -> jnp.ndarray:
+    if jax.default_backend() == "tpu":
+        y = ssd_scan_pallas(x, dt, a_log, b, c, chunk=chunk,
+                            interpret=False)
+    elif force_kernel or os.environ.get("REPRO_KERNELS") == "1":
+        y = ssd_scan_pallas(x, dt, a_log, b, c, chunk=chunk,
+                            interpret=True)
+    else:
+        y = ssd_scan_ref(x, dt, a_log, b, c)
+    return y + x * d_skip[None, None, :, None].astype(x.dtype)

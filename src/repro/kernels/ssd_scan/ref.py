@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                 b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Sequential scan: x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,N).
+    Returns y (B,S,H,P) without the D-skip term."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        a = jnp.exp(dtt * A)                        # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])              # (B,H,P,N)
+        h = h * a[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

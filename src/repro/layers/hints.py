@@ -1,0 +1,63 @@
+"""Sharding hints usable from inside model code.
+
+``shard_hint(x, *spec)`` applies a with_sharding_constraint iff an abstract
+mesh is active (jax.sharding.set_mesh context — the launchers set it) AND
+the constraint is valid for x's shape; otherwise it is the identity.  Model
+code stays mesh-agnostic: on a single CPU device every hint is a no-op.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axis_size(name: str) -> int:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return 1
+        return dict(am.shape).get(name, 1)
+    except Exception:   # noqa: BLE001 — any mesh-introspection failure
+        return 1
+
+
+def data_axis_names() -> tuple:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in am.shape)
+    except Exception:   # noqa: BLE001
+        return ()
+
+
+def _sanitize(x, entries) -> P:
+    """Drop PER-DIM any axis entry whose size doesn't divide the dim
+    (e.g. batch=1 at long_500k must not veto the sequence sharding)."""
+    out = []
+    for dim, entry in zip(x.shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= mesh_axis_size(a)
+        out.append(entry if (total <= 1 or dim % total == 0) else None)
+    return P(*out)
+
+
+def shard_hint(x, *spec_entries):
+    """Best-effort with_sharding_constraint; identity when no mesh, with
+    per-dimension divisibility fallback."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return x
+        spec = _sanitize(x, spec_entries)
+        if all(e is None for e in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:   # noqa: BLE001
+        return x

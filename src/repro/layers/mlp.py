@@ -1,0 +1,34 @@
+"""Feed-forward layers: SwiGLU (gated) and GELU (plain)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(rng, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_out
+                   ).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in
+                       ).astype(dtype)
+    return p
+
+
+def mlp_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_model)."""
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]

@@ -1,0 +1,76 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head dimension into three sections
+rotated by (temporal, height, width) position ids.  The vision frontend is
+stubbed in this repo, so position ids arrive precomputed alongside the
+patch embeddings; text tokens use t == h == w (which makes M-RoPE collapse
+to standard RoPE — the property tests rely on this identity).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(cos, sin) tables of shape positions.shape + (head_dim // 2,)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray,
+            sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x_even, x_odd) by the angle tables.
+
+    x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2) —
+    broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Standard RoPE.  q: (B, S, Hq, D), k: (B, S, Hk, D),
+    positions: (B, S) absolute token positions."""
+    cos, sin = rope_angles(positions, q.shape[-1], theta)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def apply_mrope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+                sections: Sequence[int] = None,
+                theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multimodal RoPE.  positions: (B, S, 3) = (t, h, w) ids.
+
+    ``sections`` gives the per-axis share of head_dim//2 frequency slots
+    (sums to head_dim // 2).  Default follows Qwen2-VL's 1:1.5:1.5 split
+    (16, 24, 24 at head_dim 128), scaled to the actual head_dim.
+    """
+    head_dim = q.shape[-1]
+    half = head_dim // 2
+    if sections is None:
+        t = half // 4
+        h = (half - t) // 2
+        sections = (t, h, half - t - h)
+    if sum(sections) != half:
+        raise ValueError(f"M-RoPE sections {sections} must sum to {half}")
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section s of the frequency slots uses position axis s
+    axis_of_slot = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections),
+        total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(axis_of_slot[None, None, :],
+                         positions.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1)                                   # (B, S, half)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)

@@ -1,0 +1,134 @@
+"""Encoder-decoder model (Seamless-M4T v2 backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, d_model).  The encoder is a
+bidirectional transformer (self-attn + FFN); the decoder is the unified
+TransformerLM with ``cross_attn=True`` so every decoder layer attends to
+the encoder memory.
+
+Serving flow:  encode() once per request -> encdec_prefill() populates the
+decoder cache (incl. per-layer cross-K/V projected from the memory once —
+the cross-attention cache is computed exactly once, the enc-dec analogue of
+prefix KV) -> decode_step() per output token.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import init_attention, init_mlp, mlp_forward, rms_norm
+from repro.layers.attention import blockwise_attention
+from .config import EncoderConfig, ModelConfig
+from . import transformer as T
+
+
+def init_encoder(rng, enc: EncoderConfig, dtype=jnp.bfloat16) -> dict:
+    k_blocks, = jax.random.split(rng, 1)
+    keys = jax.random.split(k_blocks, enc.n_layers)
+
+    def layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": jnp.ones((enc.d_model,), dtype),
+            "attn": init_attention(k1, enc.d_model, enc.n_heads,
+                                   enc.n_heads, enc.d_model // enc.n_heads,
+                                   dtype=dtype),
+            "norm2": jnp.ones((enc.d_model,), dtype),
+            "mlp": init_mlp(k2, enc.d_model, enc.d_ff, gated=enc.gated,
+                            dtype=dtype),
+        }
+
+    layers = [layer(keys[i]) for i in range(enc.n_layers)]
+    return {
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "final_norm": jnp.ones((enc.d_model,), dtype),
+    }
+
+
+def init_encdec_params(rng, cfg: ModelConfig) -> dict:
+    if cfg.encoder is None or not cfg.cross_attn:
+        raise ValueError("encdec model needs cfg.encoder and cfg.cross_attn")
+    k_enc, k_dec = jax.random.split(rng)
+    params = T.init_params(k_dec, cfg)
+    params["encoder"] = init_encoder(k_enc, cfg.encoder,
+                                     dtype=jnp.dtype(cfg.dtype))
+    return params
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+           remat: bool = False) -> jnp.ndarray:
+    """Bidirectional encoder over stubbed frame embeddings.
+    frames: (B, S_src, d_model) -> memory (B, S_src, d_model)."""
+    enc = cfg.encoder
+    hd = enc.d_model // enc.n_heads
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"])
+        B, S, _ = h.shape
+        q = (h @ lp["attn"]["wq"]).reshape(B, S, enc.n_heads, hd)
+        k = (h @ lp["attn"]["wk"]).reshape(B, S, enc.n_heads, hd)
+        v = (h @ lp["attn"]["wv"]).reshape(B, S, enc.n_heads, hd)
+        out = blockwise_attention(q, k, v, causal=False)
+        x = x + out.reshape(B, S, enc.n_heads * hd) @ lp["attn"]["wo"]
+        x = x + mlp_forward(lp["mlp"], rms_norm(x, lp["norm2"]))
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def encdec_forward(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+                   tokens: jnp.ndarray) -> jnp.ndarray:
+    """Training forward: encode frames, decode target tokens -> logits."""
+    memory = encode(params, cfg, frames)
+    return T.forward(params, cfg, tokens=tokens, enc_memory=memory)
+
+
+def _project_cross_kv(params: dict, cfg: ModelConfig,
+                      memory: jnp.ndarray) -> Tuple:
+    """Per-layer cross K/V from the encoder memory, computed ONCE."""
+    hd = cfg.resolved_head_dim
+    B, Se, _ = memory.shape
+
+    def per_block(blk):
+        out = {}
+        for i in range(len(cfg.block_pattern)):
+            xp = blk[f"l{i}"]["xattn"]
+            out[f"l{i}"] = {
+                "xk": (memory @ xp["wk"]).reshape(B, Se, cfg.n_kv_heads, hd),
+                "xv": (memory @ xp["wv"]).reshape(B, Se, cfg.n_kv_heads, hd),
+            }
+        return out
+
+    # vmap over the stacked repeat axis of the decoder blocks
+    return jax.vmap(per_block)(params["blocks"])
+
+
+def encdec_prefill(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+                   bos_tokens: jnp.ndarray, max_len: int
+                   ) -> Tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """Serve-side prefill: encode + build decoder cache with cross-K/V.
+
+    bos_tokens: (B, 1) decoder start tokens.
+    Returns (first logits (B, vocab), cache, memory)."""
+    memory = encode(params, cfg, frames)
+    B = frames.shape[0]
+    cache = T.init_cache(cfg, B, max_len, source_len=memory.shape[1])
+    cross = _project_cross_kv(params, cfg, memory)
+    for i in range(len(cfg.block_pattern)):
+        cache["blocks"][f"l{i}"]["xk"] = cross[f"l{i}"]["xk"]
+        cache["blocks"][f"l{i}"]["xv"] = cross[f"l{i}"]["xv"]
+    logits, cache = T.decode_step(params, cfg, bos_tokens, cache)
+    return logits, cache, memory
+
+
+def encdec_decode_step(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                       cache: dict) -> Tuple[jnp.ndarray, dict]:
+    """One decoder step (cross-K/V already in the cache)."""
+    return T.decode_step(params, cfg, tokens, cache)

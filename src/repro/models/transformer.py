@@ -1,0 +1,514 @@
+"""Unified decoder model covering the assigned LM-family architectures.
+
+Design notes
+------------
+* **Layer-stacked scan**: parameters for the repeating block are stacked on
+  a leading ``block_repeat`` axis and iterated with ``jax.lax.scan``.  The
+  lowered HLO is O(1) in depth — a 48-layer Gemma3 and a synthetic
+  trillion-parameter model compile in the same time (the XLA-level mirror
+  of APEX's Transformer-IR block extrapolation).
+* **Pure functions over dict pytrees** — no framework.  ``init_params``,
+  ``forward`` (training / prefill), ``prefill`` (forward + KV-cache
+  population) and ``decode_step`` (one token vs. cache) are the entire
+  public surface, shared by the trainer, the serving engine, and the
+  multi-pod dry-run.
+* **Heterogeneous blocks**: the block pattern interleaves attention and SSD
+  layers (Gemma3 local:global, Zamba2 hybrid); Zamba2's shared attention
+  block has ONE weight set applied once per repeat (weights live outside
+  the scanned pytree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import (gqa_attention, gqa_decode_step, init_attention,
+                          init_mamba2, init_mla, init_mlp, init_moe,
+                          mamba2_decode_step, mamba2_forward, mla_attention,
+                          mla_decode_step, mlp_forward, moe_forward,
+                          rms_norm)
+from repro.layers.attention import blockwise_attention
+from .config import LayerSpec, ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def ring_size(window: int, multiple: int = 16) -> int:
+    """Sliding-window ring-cache size: window+1 rounded up for sharding."""
+    return -(-(window + 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(rng, cfg: ModelConfig, spec: LayerSpec,
+                dense_ffn: bool = False) -> dict:
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if spec.kind == "ssm":
+        p["mixer"] = init_mamba2(k1, cfg.d_model, cfg.d_inner, cfg.d_state,
+                                 cfg.n_ssd_heads, cfg.d_conv,
+                                 cfg.n_ssm_groups, dtype=dt)
+        return p
+    if cfg.attn_kind == "mla":
+        p["attn"] = init_mla(k1, cfg.d_model, cfg.n_heads, cfg.kv_lora_rank,
+                             cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                             cfg.v_head_dim, dtype=dt)
+    else:
+        p["attn"] = init_attention(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.qkv_bias, dtype=dt)
+    if cfg.cross_attn:
+        p["xattn"] = init_attention(k2, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.resolved_head_dim,
+                                    dtype=dt)
+        p["norm_x"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.ffn_kind != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        if cfg.ffn_kind == "moe" and not dense_ffn:
+            p["ffn"] = init_moe(k3, cfg.d_model, cfg.d_ff_expert,
+                                cfg.n_routed, cfg.top_k, cfg.n_shared,
+                                cfg.ffn_gated, dtype=dt)
+        else:
+            d_ff = cfg.d_ff_dense_first if dense_ffn and \
+                cfg.d_ff_dense_first else cfg.d_ff
+            p["ffn"] = init_mlp(k3, cfg.d_model, d_ff, cfg.ffn_gated,
+                                dtype=dt)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    """Build the full parameter pytree.  Block params are stacked on a
+    leading ``block_repeat`` axis for lax.scan."""
+    cfg.validate()
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_shared, k_head, k_pre = jax.random.split(rng, 5)
+    params: dict = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size))
+            * (1.0 / math.sqrt(cfg.d_model))).astype(dt)
+
+    def init_block(rng_b, dense_ffn=False):
+        keys = jax.random.split(rng_b, len(cfg.block_pattern))
+        return {f"l{i}": _init_layer(keys[i], cfg, spec, dense_ffn)
+                for i, spec in enumerate(cfg.block_pattern)}
+
+    # prefix blocks (DeepSeek first-k-dense) are NOT scanned
+    n_prefix = cfg.first_k_dense
+    if n_prefix:
+        pk = jax.random.split(k_pre, n_prefix)
+        params["prefix"] = [init_block(pk[i], dense_ffn=True)
+                            for i in range(n_prefix)]
+
+    n_scan = cfg.block_repeat - n_prefix
+    if n_scan <= 0:
+        raise ValueError("first_k_dense must be < block_repeat")
+    bkeys = jax.random.split(k_blocks, n_scan)
+    blocks = [init_block(bkeys[i]) for i in range(n_scan)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    if cfg.shared_attn:
+        s1, s2 = jax.random.split(k_shared)
+        params["shared"] = {
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attention(s1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   dtype=dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "mlp": init_mlp(s2, cfg.d_model, cfg.shared_d_ff or cfg.d_ff,
+                            cfg.ffn_gated, dtype=dt),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill math)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "router" in p:          # MoE params
+        return moe_forward(p, x, cfg.top_k)
+    return mlp_forward(p, x)
+
+
+def _layer_apply(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jnp.ndarray,
+                 positions: jnp.ndarray,
+                 enc_memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    if spec.kind == "ssm":
+        return x + mamba2_forward(p["mixer"], rms_norm(x, p["norm1"]),
+                                  d_inner=cfg.d_inner, d_state=cfg.d_state,
+                                  n_heads=cfg.n_ssd_heads,
+                                  n_groups=cfg.n_ssm_groups)
+    h = rms_norm(x, p["norm1"])
+    # Archs whose head count doesn't divide the TP axis (qwen2-0.5b: 14,
+    # qwen1.5-32b: 40, qwen2-vl: 28) keep attention projections replicated;
+    # distribute the attention compute by resharding the BATCH over
+    # ("data","model") instead (no-op off-mesh / when indivisible).
+    from repro.layers.hints import data_axis_names, mesh_axis_size, \
+        shard_hint
+    m_sz = mesh_axis_size("model")
+    reshard = m_sz > 1 and cfg.n_heads % m_sz != 0
+    if reshard:
+        daxes = data_axis_names()
+        h = shard_hint(h, daxes + ("model",), None, None)
+    if cfg.attn_kind == "mla":
+        attn = mla_attention(p["attn"], h, positions,
+                             n_heads=cfg.n_heads,
+                             kv_lora_rank=cfg.kv_lora_rank,
+                             qk_nope_head_dim=cfg.qk_nope_head_dim,
+                             qk_rope_head_dim=cfg.qk_rope_head_dim,
+                             v_head_dim=cfg.v_head_dim,
+                             rope_theta=cfg.rope_theta)
+    else:
+        attn = gqa_attention(p["attn"], h, positions,
+                             n_heads=cfg.n_heads,
+                             n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.resolved_head_dim,
+                             window=spec.window, rope=cfg.rope,
+                             rope_theta=cfg.rope_theta)
+    if reshard:
+        attn = shard_hint(attn, data_axis_names() or None, None, None)
+    x = x + attn
+    if cfg.cross_attn and enc_memory is not None:
+        hx = rms_norm(x, p["norm_x"])
+        B, S, _ = hx.shape
+        hd = cfg.resolved_head_dim
+        q = (hx @ p["xattn"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+        Se = enc_memory.shape[1]
+        k = (enc_memory @ p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        v = (enc_memory @ p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        out = blockwise_attention(q, k, v, causal=False)
+        x = x + out.reshape(B, S, cfg.n_heads * hd) @ p["xattn"]["wo"]
+    if cfg.ffn_kind != "none":
+        x = x + _ffn_apply(cfg, p["ffn"], rms_norm(x, p["norm2"]))
+    return x
+
+
+def _shared_apply(cfg: ModelConfig, shared: dict,
+                  x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(x, shared["norm1"])
+    x = x + gqa_attention(shared["attn"], h, positions,
+                          n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                          head_dim=cfg.resolved_head_dim, rope=cfg.rope,
+                          rope_theta=cfg.rope_theta)
+    return x + mlp_forward(shared["mlp"], rms_norm(x, shared["norm2"]))
+
+
+def forward(params: dict, cfg: ModelConfig,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            enc_memory: Optional[jnp.ndarray] = None,
+            remat: bool = False,
+            return_hidden: bool = False) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, vocab).
+
+    ``tokens``: (B, S) int32 — or ``embeds``: (B, S, d_model) for stubbed
+    modality frontends (VLM patches / audio frames).
+    ``positions``: (B, S) or (B, S, 3) for M-RoPE; defaults to arange.
+    ``remat``: activation-checkpoint each block (training memory policy).
+    ``return_hidden``: return final-norm hidden states instead of logits
+    (lets the trainer chunk the LM-head matmul + loss over the sequence).
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(_dtype(cfg))
+    B, S = x.shape[:2]
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+        positions = pos
+
+    for blk in params.get("prefix", []):
+        for i, spec in enumerate(cfg.block_pattern):
+            x = _layer_apply(cfg, spec, blk[f"l{i}"], x, positions,
+                             enc_memory)
+
+    shared = params.get("shared")
+
+    # nested per-layer checkpoints only pay off for multi-layer blocks
+    # (gemma3's 6-deep pattern): with a single-layer block they re-remat
+    # the identical region, re-running every TP collective a third time
+    # (~+50% all-reduce traffic, measured on mixtral train_4k — §Perf).
+    nest_remat = remat and len(cfg.block_pattern) > 1
+
+    def block_body(x, blk):
+        for i, spec in enumerate(cfg.block_pattern):
+            if nest_remat:
+                layer_fn = jax.checkpoint(
+                    functools.partial(_layer_apply, cfg, spec))
+                x = layer_fn(blk[f"l{i}"], x, positions, enc_memory)
+            else:
+                x = _layer_apply(cfg, spec, blk[f"l{i}"], x, positions,
+                                 enc_memory)
+        if shared is not None:
+            x = _shared_apply(cfg, shared, x, positions)
+        return x, None
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               source_len: int = 0, cache_dtype=None) -> dict:
+    """All-zero cache pytree.  Layout per scanned repeat (leading R axis):
+    attention -> k/v (R, B, Smax, Hkv, D); MLA -> latent + rope-key; SSM ->
+    fp32 state + conv window.  ``len``: (B,) valid lengths.
+
+    ``cache_dtype``: KV storage dtype — e.g. jnp.float8_e4m3fn for the
+    fp8-KV-cache serving mode (paper §2.5's KV quantization; required for
+    qwen1.5-32b decode_32k to fit a 256-chip v5e pod, see EXPERIMENTS.md).
+    """
+    dt = jnp.dtype(cache_dtype) if cache_dtype is not None else _dtype(cfg)
+    R = cfg.block_repeat - cfg.first_k_dense
+    hd = cfg.resolved_head_dim
+
+    def layer_cache(spec: LayerSpec, lead=(R,)) -> dict:
+        if spec.kind == "ssm":
+            P = cfg.d_inner // cfg.n_ssd_heads
+            gn = cfg.n_ssm_groups * cfg.d_state
+            return {
+                "ssm": jnp.zeros(lead + (batch, cfg.n_ssd_heads, P,
+                                         cfg.d_state), jnp.float32),
+                "conv_x": jnp.zeros(lead + (batch, cfg.d_conv - 1,
+                                            cfg.d_inner), dt),
+                "conv_bc": jnp.zeros(lead + (batch, cfg.d_conv - 1, 2 * gn),
+                                     dt),
+            }
+        if cfg.attn_kind == "mla":
+            c = {
+                "c_kv": jnp.zeros(lead + (batch, max_len, cfg.kv_lora_rank),
+                                  dt),
+                "k_pe": jnp.zeros(lead + (batch, max_len,
+                                          cfg.qk_rope_head_dim), dt),
+            }
+        else:
+            # ring caches are rounded up to a multiple of 16 so the
+            # sequence dim shards cleanly over the model axis (a 4097-slot
+            # ring would replicate: measured as the dominant collective
+            # term of the mixtral decode cells). The ring then retains up
+            # to ring-1 >= window past tokens — a window enlarged by < 16
+            # tokens, documented in DESIGN.md.
+            kv_len = max_len if spec.window is None \
+                else min(max_len, ring_size(spec.window))
+            c = {
+                "k": jnp.zeros(lead + (batch, kv_len, cfg.n_kv_heads, hd),
+                               dt),
+                "v": jnp.zeros(lead + (batch, kv_len, cfg.n_kv_heads, hd),
+                               dt),
+            }
+        if cfg.cross_attn:
+            c["xk"] = jnp.zeros(lead + (batch, source_len, cfg.n_kv_heads,
+                                        hd), dt)
+            c["xv"] = jnp.zeros(lead + (batch, source_len, cfg.n_kv_heads,
+                                        hd), dt)
+        return c
+
+    cache = {
+        "blocks": {f"l{i}": layer_cache(spec)
+                   for i, spec in enumerate(cfg.block_pattern)},
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.first_k_dense:
+        cache["prefix"] = [
+            {f"l{i}": layer_cache(spec, lead=())
+             for i, spec in enumerate(cfg.block_pattern)}
+            for _ in range(cfg.first_k_dense)]
+    if cfg.shared_attn:
+        cache["shared"] = {
+            "k": jnp.zeros((cfg.block_repeat, batch, max_len,
+                            cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((cfg.block_repeat, batch, max_len,
+                            cfg.n_kv_heads, hd), dt),
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode step (serving)
+# ---------------------------------------------------------------------------
+
+def _layer_decode(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jnp.ndarray,
+                  lc: dict, cache_len: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                             dict]:
+    new_lc = dict(lc)
+    if spec.kind == "ssm":
+        h = rms_norm(x, p["norm1"])
+        y, st, cv = mamba2_decode_step(
+            p["mixer"], h, lc["ssm"],
+            {"x": lc["conv_x"], "bc": lc["conv_bc"]},
+            d_inner=cfg.d_inner, d_state=cfg.d_state,
+            n_heads=cfg.n_ssd_heads, n_groups=cfg.n_ssm_groups)
+        new_lc["ssm"] = st
+        new_lc["conv_x"], new_lc["conv_bc"] = cv["x"], cv["bc"]
+        return x + y, new_lc
+    h = rms_norm(x, p["norm1"])
+    if cfg.attn_kind == "mla":
+        y, cc, ck = mla_decode_step(p["attn"], h, lc["c_kv"], lc["k_pe"],
+                                    cache_len, n_heads=cfg.n_heads,
+                                    kv_lora_rank=cfg.kv_lora_rank,
+                                    qk_nope_head_dim=cfg.qk_nope_head_dim,
+                                    qk_rope_head_dim=cfg.qk_rope_head_dim,
+                                    v_head_dim=cfg.v_head_dim,
+                                    rope_theta=cfg.rope_theta)
+        new_lc["c_kv"], new_lc["k_pe"] = cc, ck
+    else:
+        # sliding-window caches are ring buffers (see gqa_decode_step)
+        y, ck, cv = gqa_decode_step(
+            p["attn"], h, lc["k"], lc["v"], cache_len,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, window=spec.window,
+            rope=cfg.rope, rope_theta=cfg.rope_theta)
+        new_lc["k"], new_lc["v"] = ck, cv
+    x = x + y
+    if cfg.cross_attn and "xk" in lc:
+        hx = rms_norm(x, p["norm_x"])
+        B = hx.shape[0]
+        hd = cfg.resolved_head_dim
+        rep = cfg.n_heads // cfg.n_kv_heads
+        q = (hx @ p["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        kr = jnp.repeat(lc["xk"], rep, axis=2)
+        vr = jnp.repeat(lc["xv"], rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                       preferred_element_type=jnp.float32) \
+            / math.sqrt(hd)
+        pattn = jax.nn.softmax(s, axis=-1).astype(vr.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pattn, vr)
+        x = x + out.reshape(B, 1, cfg.n_heads * hd) @ p["xattn"]["wo"]
+    if cfg.ffn_kind != "none":
+        x = x + _ffn_apply(cfg, p["ffn"], rms_norm(x, p["norm2"]))
+    return x, new_lc
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: dict,
+                embeds: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One serving step: (B, 1) token ids (or embeds) + cache -> logits
+    (B, vocab), updated cache."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(_dtype(cfg))
+    cache_len = cache["len"]
+    new_cache = {"len": cache_len + 1}
+
+    if "prefix" in cache:
+        new_cache["prefix"] = []
+        for blk, pc in zip(params["prefix"], cache["prefix"]):
+            npc = {}
+            for i, spec in enumerate(cfg.block_pattern):
+                x, npc[f"l{i}"] = _layer_decode(cfg, spec, blk[f"l{i}"], x,
+                                                pc[f"l{i}"], cache_len)
+            new_cache["prefix"].append(npc)
+
+    shared = params.get("shared")
+    shared_cache = cache.get("shared")
+
+    def block_body(carry, inp):
+        x = carry
+        if shared is not None:
+            blk, cblk, sck, scv = inp
+        else:
+            blk, cblk = inp
+        ncblk = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            x, ncblk[f"l{i}"] = _layer_decode(cfg, spec, blk[f"l{i}"], x,
+                                              cblk[f"l{i}"], cache_len)
+        if shared is not None:
+            h = rms_norm(x, shared["norm1"])
+            y, nk, nv = gqa_decode_step(
+                shared["attn"], h, sck, scv, cache_len,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope=cfg.rope,
+                rope_theta=cfg.rope_theta)
+            x = x + y
+            x = x + mlp_forward(shared["mlp"], rms_norm(x, shared["norm2"]))
+            return x, (ncblk, nk, nv)
+        return x, ncblk
+
+    if shared is not None:
+        xs = (params["blocks"], cache["blocks"], shared_cache["k"],
+              shared_cache["v"])
+        x, (ncb, nk, nv) = jax.lax.scan(block_body, x, xs)
+        new_cache["blocks"] = ncb
+        new_cache["shared"] = {"k": nk, "v": nv}
+    else:
+        x, ncb = jax.lax.scan(block_body, x, (params["blocks"],
+                                              cache["blocks"]))
+        new_cache["blocks"] = ncb
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head)[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache population (serving engine)
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            max_len: int, embeds: Optional[jnp.ndarray] = None,
+            lengths: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Run the prompt through the model and build the cache by replaying
+    tokens through ``decode_step`` via scan (token-parallel prefill is an
+    optimization of the serving engine; correctness-first here, and the
+    per-token path reuses the exact decode math the engine serves with).
+
+    tokens: (B, S) right-padded; lengths: (B,) true lengths.
+    Returns (last-token logits (B, vocab), populated cache).
+    """
+    if cfg.cross_attn:
+        raise ValueError("encoder-decoder models prefill via "
+                         "repro.models.encdec.encdec_prefill")
+    B, S = tokens.shape[:2]
+    cache = init_cache(cfg, B, max_len)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+
+    def step(cache, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        if embeds is not None:
+            emb = jax.lax.dynamic_slice_in_dim(embeds, t, 1, axis=1)
+            logits, cache = decode_step(params, cfg, tok, cache, embeds=emb)
+        else:
+            logits, cache = decode_step(params, cfg, tok, cache)
+        return cache, logits
+
+    cache, all_logits = jax.lax.scan(step, cache, jnp.arange(S))
+    # cache["len"] advanced S times; clamp to true lengths
+    cache["len"] = lengths
+    last = jnp.take_along_axis(
+        all_logits, (lengths - 1)[None, :, None], axis=0)[0]
+    return last, cache

@@ -1,0 +1,11 @@
+"""Real JAX serving engine: continuous batching over slot-based KV caches.
+
+Mirrors the APEX Batching Module's semantics (core/batching.py) so
+prediction-vs-reality fidelity experiments (paper Fig. 6/7) compare like
+for like.
+"""
+
+from .engine import EngineReport, ServingEngine
+from .router import ReplicaRouter
+
+__all__ = ["EngineReport", "ReplicaRouter", "ServingEngine"]

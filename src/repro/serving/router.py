@@ -1,0 +1,36 @@
+"""Multi-replica request router: shortest-queue dispatch.
+
+Model-level DP in serving = independent replicas; the router spreads
+arrivals by estimated backlog (queued prompt+gen tokens), the simple and
+robust straggler-mitigation policy at fleet scale: a slow replica
+naturally accumulates backlog and stops receiving work.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .engine import EngineReport, ServingEngine
+
+
+class ReplicaRouter:
+    def __init__(self, engines: List[ServingEngine]):
+        if not engines:
+            raise ValueError("need at least one replica")
+        self.engines = engines
+
+    def split(self, requests: List[dict]) -> List[List[dict]]:
+        """Assign requests (sorted by arrival) to replicas by least
+        estimated backlog."""
+        backlog = [0.0] * len(self.engines)
+        buckets: List[List[dict]] = [[] for _ in self.engines]
+        for r in sorted(requests, key=lambda r: r["arrival"]):
+            i = min(range(len(backlog)), key=lambda j: backlog[j])
+            buckets[i].append(r)
+            backlog[i] += len(r["prompt"]) + r["gen_len"]
+        return buckets
+
+    def run(self, requests: List[dict],
+            time_scale: float = 1.0) -> List[EngineReport]:
+        return [eng.run(bucket, time_scale=time_scale)
+                for eng, bucket in zip(self.engines, self.split(requests))]

@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, checkpointing, elastic re-meshing,
+gradient compression."""
+
+from .optimizer import adamw_init, adamw_update, cosine_lr
+from .checkpoint import CheckpointManager
+from .compress import dequantize_int8, quantize_int8
+from .elastic import reshard_state
+
+__all__ = ["CheckpointManager", "adamw_init", "adamw_update", "cosine_lr",
+           "dequantize_int8", "quantize_int8", "reshard_state"]

@@ -1,0 +1,49 @@
+"""Int8 gradient compression with stochastic rounding.
+
+Used for the cross-pod (DCN-level) gradient reduction in the pipeline /
+multi-pod training path: per-tensor absmax scaling to int8 quarters the
+gradient bytes on the slowest link.  Stochastic rounding keeps the
+quantizer unbiased (E[dequant(quant(x))] == x), so momentum-based
+optimizers see zero-mean noise instead of bias — the property the
+hypothesis tests assert.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, rng: jax.Array
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, fp32 scale).  Stochastic rounding."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    lo = jnp.floor(y)
+    p_up = y - lo
+    up = jax.random.uniform(rng, y.shape) < p_up
+    q = jnp.clip(lo + up.astype(jnp.float32), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, rng: jax.Array):
+    """Quantize every leaf; returns (codes_tree, scales_tree)."""
+    leaves, tdef = jax.tree.flatten(grads)
+    rngs = jax.random.split(rng, len(leaves))
+    qs, ss = [], []
+    for leaf, r in zip(leaves, rngs):
+        q, s = quantize_int8(leaf, r)
+        qs.append(q)
+        ss.append(s)
+    return jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, ss)
+
+
+def decompress_tree(codes, scales):
+    return jax.tree.map(dequantize_int8, codes, scales)

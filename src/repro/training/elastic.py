@@ -1,0 +1,23 @@
+"""Elastic re-meshing: resume a checkpoint on a DIFFERENT mesh shape.
+
+Device failure at scale means the replacement slice rarely matches the old
+topology.  Checkpoints store full (unsharded) arrays per leaf
+(training/checkpoint.py); ``reshard_state`` device_puts them under the new
+mesh's shardings.  Shrinking the "data" (FSDP/batch) axis or dropping the
+"pod" axis needs no arithmetic — only re-slicing, which device_put with a
+NamedSharding performs.  Growing/shrinking the "model" axis re-shards TP
+dims the same way.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_state(state, spec_tree, mesh: Mesh):
+    """device_put every leaf under its spec on the (new) mesh."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, state, spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

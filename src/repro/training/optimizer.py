@@ -1,0 +1,88 @@
+"""AdamW with fp32 master weights for bf16 training (pure JAX, no optax).
+
+State layout (pytrees mirroring the parameter tree):
+    master : fp32 master copy of the parameters
+    m, v   : fp32 first/second moments
+    step   : scalar int32
+
+Updates are computed in fp32 against the master weights; the model's bf16
+parameters are re-cast from the updated masters each step.  All state
+pytrees inherit the parameters' shardings (FSDP: sharded over "data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    master: dict
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(master=f32(params), m=zeros(params), v=zeros(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0):
+    """One AdamW step.  ``lr`` may be a traced scalar.
+    Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + eps)
+                                    + weight_decay * master)
+        return m, v, new_master
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_w = jax.tree.leaves(state.master)
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    new_state = AdamWState(master=jax.tree.unflatten(tdef, new_w),
+                           m=jax.tree.unflatten(tdef, new_m),
+                           v=jax.tree.unflatten(tdef, new_v), step=step)
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_state.master, params)
+    return new_params, new_state, {"grad_norm": gnorm, "step": step}
+
+
+def cosine_lr(step, peak_lr: float = 3e-4, warmup: int = 100,
+              total: int = 10000, floor: float = 0.1):
+    """Warmup + cosine decay schedule (traced-scalar friendly)."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

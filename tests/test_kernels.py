@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracles (the ref.py files)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.rmsnorm.rmsnorm import rms_norm_pallas
+from repro.layers.norms import rms_norm
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Skv, Hq, Hkv, D, window)
+    (1, 64, 64, 4, 4, 32, None),       # MHA
+    (2, 130, 130, 8, 2, 32, None),     # GQA + ragged length
+    (1, 96, 96, 4, 2, 64, 37),         # sliding window
+    (1, 257, 257, 2, 1, 16, None),     # odd lengths force padding
+])
+def test_flash_attention_sweep(shape, dtype):
+    B, Sq, Skv, Hq, Hkv, D, window = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=64, block_kv=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (2, 8, 2, 64, 128),
+    (3, 8, 8, 32, 300),                # MHA, non-multiple length
+    (1, 16, 2, 64, 1024),
+])
+def test_decode_attention_sweep(shape, dtype):
+    B, Hq, Hkv, D, Smax = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Smax, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Smax, Hkv, D), dtype)
+    lens = jnp.asarray([(Smax * (i + 1)) // (B + 1) + 1 for i in range(B)])
+    out = decode_attention_pallas(q, k, v, lens, block_kv=64,
+                                  interpret=True)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("shape", [
+    # (B, S, H, P, N, chunk)
+    (2, 64, 4, 8, 16, 16),
+    (1, 100, 2, 16, 32, 32),           # padding path
+    (2, 33, 8, 4, 8, 8),
+])
+def test_ssd_scan_sweep(shape, dtype):
+    B, S, H, P, N, chunk = shape
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, H))
+    b = jax.random.normal(ks[2], (B, S, N)) * 0.3
+    c = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    out = ssd_scan_pallas(x, dt, a_log, b, c, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x, dt, a_log, b, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (3, 7, 256), (130, 64)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(3), shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(4), (shape[-1],), jnp.float32)
+    out = rms_norm_pallas(x, w, block_rows=32, interpret=True)
+    ref = rms_norm(x, w)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), **_tol(dtype))
+
+
+def test_flash_vjp_matches_naive_grad():
+    """The custom flash VJP must match autodiff of the oracle."""
+    from repro.layers.attention import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, S, Hq, Hkv, D = 1, 70, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.tanh(blockwise_attention(
+            q, k, v, causal=True, window=23, q_block=32, kv_block=16)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.tanh(attention_ref(q, k, v, causal=True,
+                                              window=23)))
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)

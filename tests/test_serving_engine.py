@@ -1,0 +1,86 @@
+"""Real serving engine: completion, preemption, routing, fidelity hooks."""
+
+import jax
+import pytest
+
+from repro import configs as C
+from repro.data.requests import make_serving_requests
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+from repro.serving.router import ReplicaRouter
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = C.get_reduced("qwen2_0_5b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, n, gen=6, ctx=12, rate=100.0):
+    rs = make_serving_requests("chat", rate, n, cfg.vocab_size, max_len=ctx)
+    for r in rs:
+        r["gen_len"] = gen
+        r["prompt"] = r["prompt"][:ctx]
+    return rs
+
+
+def test_all_requests_served(small):
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=64)
+    rep = eng.run(_reqs(cfg, 5), time_scale=0.0)
+    assert len(rep.results) == 5
+    for r in rep.results:
+        assert len(r.tokens) == 6
+        assert r.e2e >= r.ttft >= 0
+
+
+def test_greedy_decode_deterministic(small):
+    cfg, params = small
+    e1 = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    e2 = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    r1 = e1.run(_reqs(cfg, 3), time_scale=0.0)
+    r2 = e2.run(_reqs(cfg, 3), time_scale=0.0)
+    t1 = {r.rid: r.tokens for r in r1.results}
+    t2 = {r.rid: r.tokens for r in r2.results}
+    assert t1 == t2
+
+
+def test_kv_budget_preemption(small):
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=64,
+                        kv_token_budget=40)
+    rep = eng.run(_reqs(cfg, 4, gen=8, ctx=16), time_scale=0.0)
+    assert len(rep.results) == 4           # everyone completes eventually
+    assert rep.preemptions >= 0
+
+
+def test_router_spreads_load(small):
+    cfg, params = small
+    engines = [ServingEngine(cfg, params, max_batch=2, max_len=64)
+               for _ in range(2)]
+    router = ReplicaRouter(engines)
+    buckets = router.split(_reqs(cfg, 6))
+    assert len(buckets) == 2
+    assert abs(len(buckets[0]) - len(buckets[1])) <= 1
+
+
+def test_engine_matches_model_decode(small):
+    """Engine-produced tokens == raw greedy decode_step tokens."""
+    import jax.numpy as jnp
+    cfg, params = small
+    prompt = jnp.asarray([[5, 9, 3, 7]], jnp.int32)
+    # reference: prefill + greedy decode
+    from repro.models import init_cache, decode_step
+    cache = init_cache(cfg, 1, 64)
+    for t in range(4):
+        logits, cache = decode_step(params, cfg, prompt[:, t:t + 1], cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(3):
+        logits, cache = decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits[0])))
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    rep = eng.run([dict(rid=0, arrival=0.0,
+                        prompt=[5, 9, 3, 7], gen_len=4)], time_scale=0.0)
+    assert rep.results[0].tokens == toks

@@ -1,0 +1,126 @@
+"""Simulator invariants: interpolation, scaling, quantization, energy."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (AnalyticBackend, ApexSearch, ProfileStore,
+                        get_format, get_trace, h100_node, h200_node,
+                        ir_from_hf_config, tpu_v5e_pod)
+from repro.core.energy import PowerModel
+from repro.core.cluster import H100
+
+CFG = dict(hidden_size=2048, num_hidden_layers=16, num_attention_heads=16,
+           num_key_value_heads=8, intermediate_size=8192, vocab_size=32000)
+
+
+def _model():
+    return ir_from_hf_config(CFG, name="tiny-7b")
+
+
+def test_interpolation_error_bounded():
+    """Sparser profiling grids (paper: measured points + interpolation)
+    stay within a small relative error of the dense grid."""
+    cluster = h100_node(8)
+    dense = ProfileStore(AnalyticBackend(cluster), grid_stride=1)
+    sparse = ProfileStore(AnalyticBackend(cluster), grid_stride=2)
+    for x in [3, 77, 1000, 30000, 1.5e6]:
+        td, _ = dense.query("gemm", (4096, 4096, "fp16"), x)
+        ts, _ = sparse.query("gemm", (4096, 4096, "fp16"), x)
+        assert abs(td - ts) / td < 0.35
+
+
+@given(x=st.floats(1, 1e8))
+@settings(max_examples=30, deadline=None)
+def test_interpolation_monotone_gemm(x):
+    cluster = h100_node(8)
+    store = ProfileStore(AnalyticBackend(cluster))
+    t1 = store.time("gemm", (1024, 1024, "fp16"), x)
+    t2 = store.time("gemm", (1024, 1024, "fp16"), x * 2)
+    assert t2 >= t1 * 0.999
+    assert t1 > 0
+
+
+def test_energy_frequency_scaling():
+    """Table 4: downclocking cuts energy on compute-bound work."""
+    full = PowerModel(H100, freq_ghz=2.0)
+    slow = PowerModel(H100, freq_ghz=0.8)
+    # same op takes 2.5x longer at 0.8 GHz but dynamic power drops 6.25x
+    t = 1.0
+    e_full = full.energy(t, utilization=0.9)
+    e_slow = slow.energy(t * 2.5, utilization=0.9)
+    assert e_slow < e_full
+
+
+def test_quantization_capacity():
+    """fp8 KV doubles token capacity; w8a8 halves weight bytes."""
+    model = _model()
+    from repro.core import generate_schemes
+    s16 = generate_schemes(model, 8, quant="fp16")[0]
+    s8 = type(s16)(model=model, model_dp=s16.model_dp,
+                   pp_stages=s16.pp_stages,
+                   cell_schemes=s16.cell_schemes, quant="kv8")
+    w8 = type(s16)(model=model, model_dp=s16.model_dp,
+                   pp_stages=s16.pp_stages,
+                   cell_schemes=s16.cell_schemes, quant="w8a8")
+    assert s8.kv_bytes_per_token_per_device() == pytest.approx(
+        s16.kv_bytes_per_token_per_device() / 2)
+    assert w8.weight_bytes_per_device() == pytest.approx(
+        s16.weight_bytes_per_device() / 2)
+    cap16 = s16.kv_token_capacity(80e9)
+    cap8 = s8.kv_token_capacity(80e9)
+    assert cap8 > cap16 * 1.5
+
+
+def test_h200_larger_design_space():
+    """Paper §4.2.3: more HBM -> more feasible plans."""
+    big = ir_from_hf_config(dict(hidden_size=8192, num_hidden_layers=80,
+                                 num_attention_heads=64,
+                                 num_key_value_heads=8,
+                                 intermediate_size=28672,
+                                 vocab_size=128256), name="llama70")
+    reqs = get_trace("chat", arrival_rate=2.0, num_requests=24)
+    n_h100 = ApexSearch(big, h100_node(8)).search(reqs).num_feasible
+    n_h200 = ApexSearch(big, h200_node(8)).search(reqs).num_feasible
+    assert n_h200 >= n_h100
+
+
+def test_tpu_cluster_supported():
+    """Paper: ASIC clusters (TPU) are first-class."""
+    model = _model()
+    reqs = get_trace("chat", arrival_rate=8.0, num_requests=16)
+    s = ApexSearch(model, tpu_v5e_pod(16, ring_group=4))
+    res = s.search(reqs, max_model_dp=4)
+    assert res.best.feasible
+
+
+def test_trace_statistics_match_spec():
+    """Synthetic traces match Table 1 moments (within sampling noise)."""
+    from repro.core import TRACE_SPECS, trace_stats
+    for name, spec in TRACE_SPECS.items():
+        reqs = get_trace(name, arrival_rate=1.0, seed=3)
+        st_ = trace_stats(reqs)
+        assert abs(st_["ctx_mean"] - spec.ctx_mean) / spec.ctx_mean < 0.25
+        assert abs(st_["gen_mean"] - spec.gen_mean) / spec.gen_mean < 0.25
+
+
+def test_extensibility_register_format():
+    """Table 5: adding a quantization format is one call."""
+    from repro.core import FORMATS, QuantFormat, register_format
+    register_format(QuantFormat("w2a16-test", 0.25, 2.0, 2.0, "fp16"))
+    assert "w2a16-test" in FORMATS
+    assert get_format("w2a16-test").weight_bytes == 0.25
+    del FORMATS["w2a16-test"]
+
+
+def test_extensibility_new_cluster():
+    """Table 5: a new device cluster is a preset function."""
+    from repro.core.cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec,
+                                    NetworkLevel)
+    dev = DeviceSpec("test-asic", {"bf16": 100e12}, 32e9, 1e12, 50, 300)
+    CLUSTER_PRESETS["test-asic-8"] = lambda: Cluster(
+        "test-asic-8", dev, (NetworkLevel("link", 8, 100e9, 1e-6),), 8)
+    from repro.core import get_cluster
+    c = get_cluster("test-asic-8")
+    assert c.num_devices == 8
+    del CLUSTER_PRESETS["test-asic-8"]

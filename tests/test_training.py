@@ -1,0 +1,119 @@
+"""Training substrate: optimizer, checkpoint/restart, compression,
+pipeline determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.data.pipeline import TokenPipeline
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compress import dequantize_int8, quantize_int8
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr
+
+
+def test_adamw_reduces_quadratic():
+    w = {"x": jnp.asarray([3.0, -2.0, 1.5])}
+    state = adamw_init(w)
+    for _ in range(200):
+        g = {"x": 2 * w["x"]}
+        w, state, _ = adamw_update(w, g, state, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(w["x"]).max()) < 0.3
+
+
+def test_cosine_lr_schedule():
+    assert float(cosine_lr(jnp.asarray(0), warmup=10)) == 0.0
+    peak = float(cosine_lr(jnp.asarray(10), peak_lr=1e-3, warmup=10))
+    assert peak == pytest.approx(1e-3, rel=0.1)
+    late = float(cosine_lr(jnp.asarray(10000), peak_lr=1e-3, warmup=10,
+                           total=10000))
+    assert late < peak
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+             "b": {"c": jnp.ones((4,), jnp.float32)}}
+    mgr.save(5, state, extra={"rng": 42})
+    step, restored, extra = mgr.restore(state)
+    assert step == 5 and extra["rng"] == 42
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"], np.float32),
+        np.asarray(state["a"], np.float32))
+    assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_rotation_and_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.ones((3,))}
+    for s in (1, 2, 3):
+        mgr.save(s, state)
+    assert len(mgr.list_checkpoints()) == 2      # rotated
+    # corrupt the newest; restore must fall back to the older one
+    newest = mgr.list_checkpoints()[-1]
+    victim = [f for f in os.listdir(newest) if f.endswith(".npy")][0]
+    with open(os.path.join(newest, victim), "wb") as f:
+        f.write(b"garbage")
+    step, _, _ = mgr.restore(state)
+    assert step == 2
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_int8_quantization_unbiased(seed):
+    """Stochastic rounding: E[dequant(quant(x))] == x."""
+    rngs = jax.random.split(jax.random.PRNGKey(seed), 64)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (32,)) * 0.1
+    acc = jnp.zeros_like(x)
+    for r in rngs:
+        q, s = quantize_int8(x, r)
+        acc = acc + dequantize_int8(q, s)
+    mean = acc / len(rngs)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.abs(mean - x).max()) < 4 * scale / np.sqrt(len(rngs)) \
+        + 1e-6
+
+
+def test_quantization_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s = quantize_int8(x, jax.random.PRNGKey(1))
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) + 1e-7
+
+
+def test_pipeline_deterministic_and_sharded():
+    pipe = TokenPipeline(vocab_size=100, seq_len=8, global_batch=4,
+                         num_shards=2, seed=7)
+    a = pipe.batch(3, 0)
+    b = pipe.batch(3, 0)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])   # recomputable
+    c = pipe.batch(3, 1)
+    assert not np.array_equal(a["tokens"], c["tokens"])       # shards differ
+    d = pipe.batch(4, 0)
+    assert not np.array_equal(a["tokens"], d["tokens"])       # steps differ
+    # labels are next-token shifted
+    g = pipe.global_batch_at(0)
+    assert g["tokens"].shape == (4, 8)
+
+
+def test_train_resume_bitexact(tmp_path):
+    """Crash-resume yields the same state as an uninterrupted run."""
+    from repro.launch.train import train
+    logs = []
+    p1, o1, l1 = train("qwen2-0.5b", steps=4, batch=2, seq=16,
+                       ckpt_dir=str(tmp_path / "a"), ckpt_every=2,
+                       log=lambda *a: logs.append(a))
+    # interrupted run: 2 steps, then resume to 4
+    train("qwen2-0.5b", steps=2, batch=2, seq=16,
+          ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+          log=lambda *a: None)
+    p2, o2, l2 = train("qwen2-0.5b", steps=4, batch=2, seq=16,
+                       ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+                       log=lambda *a: None)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
