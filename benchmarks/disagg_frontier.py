@@ -1,0 +1,130 @@
+"""Colocated vs disaggregated TTFT/TPOT frontier.
+
+Sweeps the three paper traces (summarization / creation / chat, §4.1
+Table 1) for a dense and a MoE model, runs the joint plan search
+(``ApexSearch.search(..., disaggregated=True)``), and reports each
+family's latency frontier: for every (model, trace) point, the best
+TTFT-p95 each family achieves, and — the disaggregation claim — whether a
+disaggregated plan strictly beats the best colocated plan's TTFT p95 *at
+comparable TPOT p95* (colocated candidates within ``TPOT_TOL`` of the
+disaggregated plan's TPOT are admitted to the comparison).
+
+Run:  PYTHONPATH=src python benchmarks/disagg_frontier.py [--requests N]
+or:   PYTHONPATH=src python -m benchmarks.run --only disagg
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import (ApexSearch, BatchingPolicy, get_trace,
+                        h100_multinode, ir_from_hf_config)
+
+try:
+    from .common import PAPER_MODELS, Timer, csv_row
+except ImportError:                      # direct script execution
+    from common import PAPER_MODELS, Timer, csv_row
+
+MODELS = {
+    "qwen2.5-32b": "dense",
+    "mixtral-8x22b": "moe",
+}
+TRACES = ["summarization", "creation", "chat"]
+# Arrival rates chosen so each trace loads a 16-GPU cluster into the
+# contention regime where batching policy matters (idle clusters make
+# every plan look alike).
+RATES = {"summarization": 1.0, "creation": 1.0, "chat": 2.0}
+TPOT_TOL = 1.10      # "comparable TPOT": within 10% of the disagg plan's
+
+
+def pareto(reports):
+    """Non-dominated subset under (ttft_p95, tpot_p95), sorted by TTFT."""
+    pts = sorted(reports, key=lambda r: (r.ttft_p95, r.tpot_p95))
+    front, best_tpot = [], float("inf")
+    for r in pts:
+        if r.tpot_p95 < best_tpot:
+            front.append(r)
+            best_tpot = r.tpot_p95
+    return front
+
+
+def frontier_row(model_name, trace, requests, cluster):
+    model = ir_from_hf_config(PAPER_MODELS[model_name], name=model_name)
+    reqs = get_trace(trace, arrival_rate=RATES[trace],
+                     num_requests=requests, seed=0)
+    search = ApexSearch(model, cluster)
+    res = search.search(reqs, objective="ttft", feasible_only=True,
+                        disaggregated=True,
+                        policy=BatchingPolicy(chunked_prefill=512))
+    feas = [r for r in res.all_reports if r.feasible]
+    coloc = [r for r in feas if not r.plan_label.startswith("disagg[")]
+    disagg = [r for r in feas if r.plan_label.startswith("disagg[")]
+    return res, coloc, disagg
+
+
+def run(quick: bool = False, requests: int = 96, nodes: int = 2,
+        gpus_per_node: int = 8) -> int:
+    """Registry entry (benchmarks/run.py): emits the frontier table plus
+    one CSV row; returns the number of disagg TTFT wins."""
+    if quick:
+        requests = 48
+    cluster = h100_multinode(nodes, gpus_per_node)
+    with Timer() as t:
+        wins = _frontier(cluster, requests)
+    csv_row("disagg_frontier", t.seconds * 1e6,
+            f"ttft_wins={wins}/{len(MODELS) * len(TRACES)}")
+    return wins
+
+
+def _frontier(cluster, requests: int) -> int:
+    print(f"# disagg frontier on {cluster.name}, "
+          f"{requests} requests/trace")
+    print(f"{'model':<14} {'trace':<14} {'family':<10} "
+          f"{'ttft_p95_ms':>11} {'tpot_p95_ms':>11} {'e2e_s':>8}  plan")
+
+    wins = 0
+    for model_name in MODELS:
+        for trace in TRACES:
+            res, coloc, disagg = frontier_row(model_name, trace,
+                                              requests, cluster)
+            for fam, reps in (("colocated", coloc), ("disagg", disagg)):
+                for r in pareto(reps)[:3]:
+                    print(f"{model_name:<14} {trace:<14} {fam:<10} "
+                          f"{r.ttft_p95 * 1e3:>11.1f} "
+                          f"{r.tpot_p95 * 1e3:>11.2f} "
+                          f"{r.e2e_latency:>8.1f}  {r.plan_label[:72]}")
+            # the disaggregation claim: strictly better TTFT p95 than the
+            # best colocated plan at comparable TPOT p95
+            claim = None
+            for d in pareto(disagg):
+                comparable = [c for c in coloc
+                              if c.tpot_p95 <= d.tpot_p95 * TPOT_TOL]
+                if not comparable:
+                    continue
+                best_c = min(comparable, key=lambda c: c.ttft_p95)
+                if d.ttft_p95 < best_c.ttft_p95:
+                    claim = (d, best_c)
+                    break
+            if claim:
+                d, c = claim
+                wins += 1
+                print(f"{'':<14} {'':<14} >> disagg wins TTFT: "
+                      f"{d.ttft_p95 * 1e3:.1f}ms vs {c.ttft_p95 * 1e3:.1f}ms "
+                      f"at TPOT {d.tpot_p95 * 1e3:.2f} vs "
+                      f"{c.tpot_p95 * 1e3:.2f}ms")
+            else:
+                print(f"{'':<14} {'':<14} >> no disagg TTFT win at "
+                      f"comparable TPOT")
+    print(f"# disagg TTFT wins at comparable TPOT: {wins}/"
+          f"{len(MODELS) * len(TRACES)} (model, trace) points")
+    return wins
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--gpus-per-node", type=int, default=8)
+    args = ap.parse_args()
+    raise SystemExit(0 if run(requests=args.requests, nodes=args.nodes,
+                              gpus_per_node=args.gpus_per_node) > 0 else 1)

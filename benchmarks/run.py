@@ -20,11 +20,12 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (fig6_fidelity, fig7_scaling, fig8_scaling, fig9_slo,
-                   roofline, table2_plan_search, table3_clusters,
-                   table4_energy, table5_extensibility)
+    from . import (disagg_frontier, fig6_fidelity, fig7_scaling,
+                   fig8_scaling, fig9_slo, roofline, table2_plan_search,
+                   table3_clusters, table4_energy, table5_extensibility)
 
     benches = {
+        "disagg": lambda: disagg_frontier.run(quick=quick),
         "table2": lambda: table2_plan_search.run(quick=quick),
         "table3": lambda: table3_clusters.run(quick=quick),
         "table4": lambda: table4_energy.run(quick=quick),

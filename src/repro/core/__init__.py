@@ -10,7 +10,7 @@ from .ir import (AttentionCell, Block, Cell, CrossAttentionCell, MLACell,
                  ir_from_hf_config)
 from .mapper import ExecutionPlan, assign_physical_ids, map_scheme
 from .planner import (ParallelScheme, divisors, generate_schemes,
-                      heuristic_scheme)
+                      heuristic_scheme, prefilter_schemes)
 from .profiles import AnalyticBackend, CollectiveModel, MeasuredBackend, \
     ProfileBackend, ProfileStore
 from .quant import FORMATS, QuantFormat, get_format, register_format
@@ -33,7 +33,8 @@ __all__ = [
     "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
     "divisors", "generate_schemes", "get_cluster", "get_format", "get_trace",
     "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
-    "ir_from_hf_config", "map_scheme", "register_format",
+    "ir_from_hf_config", "map_scheme", "prefilter_schemes",
+    "register_format",
     "reshard_collectives", "schemes_for_cell", "synthesize_trace",
     "tpu_v5e_multipod", "tpu_v5e_pod", "trace_stats",
 ]

@@ -122,20 +122,34 @@ class BatchingModule:
     def __init__(self, kv_capacity_tokens: int, policy: BatchingPolicy,
                  model_windows: Sequence = (None,),
                  max_sequences: int = 512,
-                 is_encdec: bool = False):
+                 is_encdec: bool = False,
+                 role: str = "both"):
         if kv_capacity_tokens <= 0:
             raise ValueError("plan has no KV capacity — infeasible")
+        if role not in ("both", "decode"):
+            raise ValueError(f"unknown batching role {role!r}")
         self.capacity = kv_capacity_tokens
         self.policy = policy
         self.windows = tuple(model_windows)
         self.max_sequences = max_sequences
         self.is_encdec = is_encdec
+        # role="decode" models the decode pool of a disaggregated deployment
+        # (disagg/simulate.py): an admitted request's prompt KV is already
+        # materialized (shipped from the prefill pool), so admission starts
+        # it mid-lifecycle — prefill done, first token produced — and only
+        # decode iterations run here.  A preempted request loses its cache
+        # and is re-admitted the same way (models a KV re-fetch as free,
+        # which under-counts transfer traffic but keeps timing first-order:
+        # preemptions in a well-sized decode pool are rare).
+        self.role = role
 
     # -- public entry ---------------------------------------------------------
 
     def run(self, requests: Sequence[Request], step_cost: StepCost
             ) -> BatchingResult:
         if self.policy.mode == "static":
+            if self.role == "decode":
+                raise ValueError("decode role requires continuous batching")
             return self._run_static(requests, step_cost)
         return self._run_continuous(requests, step_cost)
 
@@ -184,6 +198,19 @@ class BatchingModule:
                 req = pending.pop(0)
                 a = _Active(req=req, admitted_at=now, order=order)
                 order += 1
+                if self.role == "decode":
+                    # prompt KV arrived from the prefill pool; the first
+                    # token was already emitted there.  Standalone records
+                    # stamp first-token at admission; a coupled simulation
+                    # (disagg/simulate.py) overwrites it with the prefill
+                    # pool's timestamp.
+                    a.prefill_done = req.context_len
+                    a.generated = 1
+                    a.first_token_time = now
+                    records[req.rid].first_token_time = now
+                    if a.done:          # gen_len <= 1: nothing to decode
+                        records[req.rid].finish_time = now
+                        continue
                 active.append(a)
                 new_admissions.append(a)
 
@@ -362,8 +389,10 @@ class BatchingModule:
                   newly_admitted) -> Workload:
         chunks = [(take, a.prefill_done + take) for a, take in iter_prefills]
         kv_lens = [a.kv_tokens for a in iter_decodes]
+        # decode role: the encoder already ran in the prefill pool — its
+        # memory ships with the KV; only cross-attention reads remain here
         enc_tokens = sum(a.req.source_len for a in newly_admitted) \
-            if self.is_encdec else 0
+            if self.is_encdec and self.role != "decode" else 0
         pre_src = [a.req.source_len for a, _ in iter_prefills] \
             if self.is_encdec else ()
         dec_src = [a.req.source_len for a in iter_decodes] \

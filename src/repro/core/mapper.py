@@ -42,6 +42,7 @@ class ExecutionPlan:
                               # replica 0 — stages/replicas are isomorphic)
     stage_span: int           # span of adjacent-stage p2p pairs
     replica_span: int
+    device_offset: int = 0    # first physical id (pool partitioning)
 
     def label(self) -> str:
         return self.scheme.label()
@@ -63,7 +64,8 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
-def map_scheme(scheme: ParallelScheme, cluster: Cluster) -> ExecutionPlan:
+def map_scheme(scheme: ParallelScheme, cluster: Cluster,
+               device_offset: int = 0) -> ExecutionPlan:
     """Assign logical devices to physical devices, bottom-up.
 
     Physical ids are laid out so that consecutive ids are topologically
@@ -71,25 +73,40 @@ def map_scheme(scheme: ParallelScheme, cluster: Cluster) -> ExecutionPlan:
     Packing a group into consecutive ids therefore minimizes its span, and
     the bottom-up priority order (cells -> stages -> replicas) matches the
     paper: finer-grained parallelism gets the better links.
+
+    ``device_offset`` places the scheme on the physical id range
+    [offset, offset + total_devices) — disaggregated pools partition one
+    cluster into contiguous id ranges (disagg/pools.py).
     """
     n_needed = scheme.total_devices
-    if n_needed > cluster.num_devices:
+    if device_offset < 0:
+        raise ValueError(f"negative device_offset {device_offset}")
+    if device_offset + n_needed > cluster.num_devices:
         raise ValueError(
-            f"scheme needs {n_needed} devices; cluster {cluster.name} has "
-            f"{cluster.num_devices}")
+            f"scheme needs {n_needed} devices at offset {device_offset}; "
+            f"cluster {cluster.name} has {cluster.num_devices}")
 
     s_dev = scheme.stage_devices
     l1 = cluster.levels[0].group_size
 
     # Stage-0/replica-0 cell groups: pack each cell's shard groups into
-    # consecutive ids starting at 0.  A cell with dp replicas of width
-    # `shard` forms dp groups; the widest communicating unit is `shard`.
+    # consecutive ids starting at the pool offset.  A cell with dp replicas
+    # of width `shard` forms dp groups; the widest communicating unit is
+    # `shard`.
     cell_groups: List[GroupPlacement] = []
     for cs in scheme.cell_schemes:
-        ids = tuple(range(cs.shard))      # one representative shard group
+        ids = tuple(range(device_offset, device_offset + cs.shard))
         # span: if the shard group fits in an L1 group it spans `shard`
-        # devices at level 1; otherwise it genuinely crosses levels.
+        # devices at level 1; otherwise it genuinely crosses levels.  An
+        # offset pool whose range straddles a group boundary is promoted to
+        # the level that actually covers the range.
         span = cs.shard
+        if cs.shard > 1:
+            for lvl in cluster.levels:
+                if ids[0] // lvl.group_size == ids[-1] // lvl.group_size:
+                    if lvl is not cluster.levels[0]:
+                        span = max(span, lvl.group_size)
+                    break
         cell_groups.append(GroupPlacement("cell", ids, span))
 
     # Adjacent pipeline stages occupy consecutive s_dev-sized chunks; the
@@ -97,6 +114,19 @@ def map_scheme(scheme: ParallelScheme, cluster: Cluster) -> ExecutionPlan:
     # chunk and the first of the next.
     if scheme.pp_stages > 1:
         stage_span = s_dev + 1 if s_dev < l1 else 2 * s_dev
+        if device_offset % l1:
+            # A misaligned pool can put a stage boundary across an L1
+            # group even when s_dev < l1; promote the p2p span to the
+            # level that covers the worst adjacent-stage boundary pair.
+            R = scheme.devices_per_replica
+            for r in range(scheme.model_dp):
+                for p in range(1, scheme.pp_stages):
+                    b = device_offset + r * R + p * s_dev
+                    lvl = next(l for l in cluster.levels
+                               if (b - 1) // l.group_size
+                               == b // l.group_size)
+                    if lvl is not cluster.levels[0]:
+                        stage_span = max(stage_span, lvl.group_size)
         stage_span = min(stage_span, cluster.num_devices)
     else:
         stage_span = 1
@@ -105,7 +135,8 @@ def map_scheme(scheme: ParallelScheme, cluster: Cluster) -> ExecutionPlan:
 
     return ExecutionPlan(scheme=scheme, cluster=cluster,
                          cell_groups=tuple(cell_groups),
-                         stage_span=stage_span, replica_span=replica_span)
+                         stage_span=stage_span, replica_span=replica_span,
+                         device_offset=device_offset)
 
 
 def assign_physical_ids(scheme: ParallelScheme, cluster: Cluster

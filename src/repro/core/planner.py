@@ -177,6 +177,20 @@ def generate_schemes(model: ModelIR, num_devices: int,
     return schemes
 
 
+def prefilter_schemes(schemes: List[ParallelScheme], hbm_bytes: float,
+                      frac: float = 0.92) -> List[ParallelScheme]:
+    """Static weight-memory pre-filter.
+
+    A scheme whose per-device weight bytes alone overflow ``frac`` of the
+    device HBM can never simulate feasibly, so it is dropped before the
+    (expensive) mapping + trace simulation.  Shared by the colocated search
+    path (core/search.py) and the disaggregated per-pool pruning
+    (disagg/pools.py) so both reject infeasible plans identically.
+    """
+    cap = hbm_bytes * frac
+    return [s for s in schemes if s.weight_bytes_per_device() < cap]
+
+
 def heuristic_scheme(model: ModelIR, num_devices: int, cluster=None,
                      quant: str = "fp16") -> ParallelScheme:
     """The baseline plan (paper §4.2): TP within a node, PP across nodes."""

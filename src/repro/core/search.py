@@ -24,7 +24,8 @@ from .batching import BatchingPolicy
 from .cluster import Cluster
 from .ir import ModelIR
 from .mapper import ExecutionPlan, map_scheme
-from .planner import ParallelScheme, generate_schemes, heuristic_scheme
+from .planner import (ParallelScheme, generate_schemes, heuristic_scheme,
+                      prefilter_schemes)
 from .profiles import AnalyticBackend, CollectiveModel, ProfileBackend, \
     ProfileStore
 from .simulator import PlanSimulator, SimulationReport
@@ -44,15 +45,18 @@ OBJECTIVES = {
 @dataclasses.dataclass
 class SearchResult:
     best: SimulationReport
-    best_plan: ExecutionPlan
+    best_plan: object              # ExecutionPlan | disagg.DisaggPlan
     all_reports: List[SimulationReport]
     num_schemes: int
     num_feasible: int
     search_seconds: float
+    objective: str = "latency"     # what the search ranked by
 
     def top(self, k: int = 5) -> List[SimulationReport]:
+        """Best-k feasible reports under the *search's own* objective."""
+        key = OBJECTIVES.get(self.objective, OBJECTIVES["latency"])
         return sorted((r for r in self.all_reports if r.feasible),
-                      key=lambda r: r.e2e_latency)[:k]
+                      key=key)[:k]
 
 
 class ApexSearch:
@@ -97,8 +101,16 @@ class ApexSearch:
                max_model_dp: Optional[int] = None,
                slo_ttft_s: Optional[float] = None,
                slo_tpot_s: Optional[float] = None,
+               disaggregated: bool = False,
+               transfer_mode: str = "layerwise",
+               decode_quant: Optional[str] = None,
+               max_disagg_plans: int = 256,
                progress: Optional[Callable[[int, int], None]] = None
                ) -> SearchResult:
+        """Rank plans under ``objective``; with ``disaggregated=True`` the
+        candidate set is the union of colocated schemes and two-pool
+        disaggregated schemes (disagg/), scored by the same simulator
+        metrics so one objective ranks both families jointly."""
         t0 = _time.perf_counter()
         obj = OBJECTIVES[objective]
         schemes = generate_schemes(self.model, self.cluster.num_devices,
@@ -109,19 +121,38 @@ class ApexSearch:
             schemes = [s for s in schemes
                        if s.is_feasible_for_current_systems()]
         # cheap static pre-filter: drop plans whose weights alone overflow
-        cap = self.cluster.device.hbm_bytes * 0.92
-        schemes = [s for s in schemes if s.weight_bytes_per_device() < cap]
+        schemes = prefilter_schemes(schemes,
+                                    self.cluster.device.hbm_bytes)
+
+        candidates: List[tuple] = [("colocated", s) for s in schemes]
+        kv_model = None
+        if disaggregated:
+            from ..disagg import (DisaggSimulator, KVTransferModel,
+                                  generate_disagg_schemes,
+                                  map_disagg_scheme)
+            dschemes = generate_disagg_schemes(
+                self.model, self.cluster, quant=quant,
+                decode_quant=decode_quant,
+                feasible_only=True, transfer_mode=transfer_mode,
+                max_model_dp=max_model_dp, max_plans=max_disagg_plans)
+            kv_model = KVTransferModel(self.coll, mode=transfer_mode)
+            candidates += [("disagg", s) for s in dschemes]
 
         reports: List[SimulationReport] = []
         best: Optional[SimulationReport] = None
-        best_plan: Optional[ExecutionPlan] = None
-        for i, scheme in enumerate(schemes):
-            plan = map_scheme(scheme, self.cluster)
-            sim = PlanSimulator(plan, self.store, self.coll)
+        best_plan = None
+        for i, (family, scheme) in enumerate(candidates):
+            if family == "colocated":
+                plan = map_scheme(scheme, self.cluster)
+                sim = PlanSimulator(plan, self.store, self.coll)
+            else:
+                plan = map_disagg_scheme(scheme, self.cluster)
+                sim = DisaggSimulator(plan, self.store, self.coll,
+                                      kv_model)
             rep = sim.simulate(requests, policy=policy)
             reports.append(rep)
             if progress:
-                progress(i + 1, len(schemes))
+                progress(i + 1, len(candidates))
             if not rep.feasible:
                 continue
             if slo_ttft_s is not None and rep.ttft_p95 > slo_ttft_s:
@@ -133,11 +164,13 @@ class ApexSearch:
         if best is None:
             raise RuntimeError(
                 "no feasible plan found (memory or SLO constraints too "
-                f"tight) among {len(schemes)} schemes")
+                f"tight) among {len(candidates)} schemes")
         return SearchResult(best=best, best_plan=best_plan,
-                            all_reports=reports, num_schemes=len(schemes),
+                            all_reports=reports,
+                            num_schemes=len(candidates),
                             num_feasible=sum(r.feasible for r in reports),
-                            search_seconds=_time.perf_counter() - t0)
+                            search_seconds=_time.perf_counter() - t0,
+                            objective=objective)
 
 
 def compare_three_plans(model: ModelIR, cluster: Cluster,

@@ -1,0 +1,90 @@
+"""KV-cache handoff cost model for disaggregated serving.
+
+When a prompt finishes prefill, its KV cache must move from the prefill
+pool to the decode pool.  Payload size comes straight from the model IR:
+
+    bytes = layers x 2(K,V) x kv_heads x head_dim x kv_bytes(quant) x ctx
+
+(``ModelIR.kv_bytes_per_token`` already folds the per-cell structure —
+GQA kv_heads, MLA latent width, sliding-window cells — so MLA ships its
+compressed latent, exactly what real disagg stacks do.  Recurrent state
+of SSM/hybrid cells rides along via ``state_bytes_per_seq``.)
+
+Timing is routed through the existing ``CollectiveModel`` as p2p traffic
+at the network level spanning the two pools (``pools.cross_pool_span`` —
+the same level-selection rule the Device Mapper uses), so there are no
+hard-coded bandwidths anywhere in this model.  Two modes:
+
+  * ``blocking``  — decode admission waits for the full cache: the whole
+    serialization time is exposed.
+  * ``layerwise`` — layer i's KV streams while layer i+1 prefills (the
+    overlap every production disagg system implements); only the *last*
+    layer's chunk is still on the wire when prefill completes, so the
+    exposed delay is one layer's transfer.  Wire time and energy are still
+    charged in full.
+
+Transfers fan out over the parallel links between the pools: one request's
+cache is sharded across the source TP group and lands sharded on the
+destination TP group, so ``lanes = min(prefill tp, decode tp)`` moves
+concurrently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.ir import ModelIR
+from ..core.profiles import CollectiveModel
+from ..core.quant import get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferEstimate:
+    """One request's KV handoff cost."""
+
+    nbytes: float             # total payload (all layers, all heads)
+    delay_s: float            # admission delay visible to the decode pool
+    wire_s: float             # full serialization time (one lane's share)
+    energy_j: float
+
+    @property
+    def effective_gbps(self) -> float:
+        return (self.nbytes / self.wire_s / 1e9) if self.wire_s > 0 else 0.0
+
+
+class KVTransferModel:
+    """Per-request KV handoff: bytes from the IR, time from the cluster."""
+
+    def __init__(self, coll: CollectiveModel, mode: str = "layerwise"):
+        if mode not in ("layerwise", "blocking"):
+            raise ValueError(f"unknown transfer mode {mode!r}")
+        self.coll = coll
+        self.mode = mode
+
+    def kv_bytes(self, model: ModelIR, ctx_len: int, quant: str) -> float:
+        """Payload bytes for one request's cache at ``ctx_len`` tokens."""
+        q = get_format(quant)
+        per_tok = model.kv_bytes_per_token(q)
+        state = model.state_bytes_per_seq(q)   # SSM/hybrid recurrent state
+        return per_tok * ctx_len + state
+
+    def estimate(self, model: ModelIR, ctx_len: int, quant: str,
+                 span: int, lanes: int = 1) -> TransferEstimate:
+        """Cost one request's handoff over the cross-pool link.
+
+        ``span`` is the device span of the link (pools.cross_pool_span);
+        ``lanes`` is how many links move shards concurrently.
+        """
+        nbytes = self.kv_bytes(model, ctx_len, quant)
+        if nbytes <= 0:       # attention-free model: nothing to ship
+            return TransferEstimate(0.0, 0.0, 0.0, 0.0)
+        lanes = max(1, lanes)
+        wire, energy = self.coll.query("p2p", nbytes / lanes, span)
+        if self.mode == "blocking":
+            delay = wire
+        else:
+            layers = max(1, model.block.repeat)
+            delay, _ = self.coll.query("p2p", nbytes / (lanes * layers),
+                                       span)
+        return TransferEstimate(nbytes=nbytes, delay_s=delay, wire_s=wire,
+                                energy_j=energy)

@@ -1,0 +1,177 @@
+"""Pool partitioning for disaggregated prefill/decode serving.
+
+A ``DisaggScheme`` splits one physical cluster into a *prefill pool* and a
+*decode pool*, each carrying its own ``ParallelScheme`` (so each pool picks
+its own DP/PP/TP/quant — the whole point of disaggregation: prefill wants
+high TP for low TTFT, decode wants DP-heavy replication for token
+throughput).  Pools occupy contiguous physical id ranges — prefill at
+[0, P), decode at [P, N) — so the existing bottom-up Device Mapper places
+each pool unchanged via its ``device_offset`` and the KV handoff crosses a
+well-defined network level of the cluster tree.
+
+Plan enumeration reuses Algorithm 1 per pool and prunes each pool's
+candidates with the same static weight-memory pre-filter as the colocated
+search path (``planner.prefilter_schemes``), so a pool split that overflows
+either pool's HBM is rejected before any simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..core.cluster import Cluster
+from ..core.ir import ModelIR
+from ..core.mapper import ExecutionPlan, map_scheme
+from ..core.planner import (ParallelScheme, generate_schemes,
+                            prefilter_schemes)
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggScheme:
+    """A disaggregated plan: per-pool parallel schemes + transfer mode.
+
+    ``transfer_mode``:
+      * ``"layerwise"`` — KV blocks stream to the decode pool as each layer
+        finishes prefill; only the last layer's chunk remains on the wire
+        when prefill completes (the admission delay the decode pool sees).
+      * ``"blocking"``  — the whole cache ships after prefill completes.
+    """
+
+    prefill: ParallelScheme
+    decode: ParallelScheme
+    transfer_mode: str = "layerwise"
+
+    def __post_init__(self):
+        if self.transfer_mode not in ("layerwise", "blocking"):
+            raise ValueError(
+                f"unknown transfer mode {self.transfer_mode!r}")
+        if self.prefill.model is not self.decode.model:
+            raise ValueError("pools must serve the same model IR")
+
+    @property
+    def model(self) -> ModelIR:
+        return self.prefill.model
+
+    @property
+    def prefill_devices(self) -> int:
+        return self.prefill.total_devices
+
+    @property
+    def decode_devices(self) -> int:
+        return self.decode.total_devices
+
+    @property
+    def total_devices(self) -> int:
+        return self.prefill_devices + self.decode_devices
+
+    def label(self) -> str:
+        return (f"disagg[{self.prefill_devices}P:{self.prefill.label()}"
+                f" | {self.decode_devices}D:{self.decode.label()}]"
+                f"@{self.transfer_mode}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggPlan:
+    """A physically-mapped disaggregated plan: two pool ExecutionPlans plus
+    the network span the KV handoff crosses."""
+
+    scheme: DisaggScheme
+    cluster: Cluster
+    prefill_plan: ExecutionPlan
+    decode_plan: ExecutionPlan
+    transfer_span: int        # devices spanned by the cross-pool link
+
+    def label(self) -> str:
+        return self.scheme.label()
+
+    def describe(self) -> str:
+        lvl = self.cluster.level_for_group(self.transfer_span)
+        return "\n".join([
+            f"disagg plan on {self.cluster.name} "
+            f"({self.scheme.prefill_devices} prefill + "
+            f"{self.scheme.decode_devices} decode devices, "
+            f"KV handoff over {lvl.name}, {self.scheme.transfer_mode})",
+            self.prefill_plan.describe(),
+            self.decode_plan.describe(),
+        ])
+
+
+def cross_pool_span(cluster: Cluster, prefill_devices: int) -> int:
+    """Device span of the prefill->decode KV link, for level lookup.
+
+    The pools abut at physical ids (P-1, P); the handoff crosses the
+    smallest tree level whose group contains both ids.  Returns a span that
+    ``Cluster.level_for_group`` maps back to exactly that level — this is
+    the same level-selection rule the Device Mapper applies to collective
+    groups, so KV-transfer traffic is costed with the cluster's own
+    bandwidth/latency tables, never a hard-coded link speed.
+    """
+    src, dst = prefill_devices - 1, prefill_devices
+    if dst >= cluster.num_devices:
+        raise ValueError("decode pool is empty")
+    for lvl in cluster.levels:
+        if src // lvl.group_size == dst // lvl.group_size:
+            return 2 if lvl is cluster.levels[0] else lvl.group_size
+    return cluster.levels[-1].group_size
+
+
+def map_disagg_scheme(scheme: DisaggScheme, cluster: Cluster) -> DisaggPlan:
+    """Map both pools onto one cluster: prefill at offset 0, decode next."""
+    if scheme.total_devices > cluster.num_devices:
+        raise ValueError(
+            f"disagg scheme needs {scheme.total_devices} devices; cluster "
+            f"{cluster.name} has {cluster.num_devices}")
+    p = scheme.prefill_devices
+    return DisaggPlan(
+        scheme=scheme, cluster=cluster,
+        prefill_plan=map_scheme(scheme.prefill, cluster, device_offset=0),
+        decode_plan=map_scheme(scheme.decode, cluster, device_offset=p),
+        transfer_span=cross_pool_span(cluster, p))
+
+
+def pool_splits(num_devices: int) -> List[Tuple[int, int]]:
+    """All (prefill_devices, decode_devices) partitions of the cluster."""
+    return [(p, num_devices - p) for p in range(1, num_devices)]
+
+
+def generate_disagg_schemes(model: ModelIR, cluster: Cluster,
+                            quant: str = "fp16",
+                            decode_quant: Optional[str] = None,
+                            feasible_only: bool = True,
+                            transfer_mode: str = "layerwise",
+                            max_model_dp: Optional[int] = None,
+                            max_plans: int = 512) -> List[DisaggScheme]:
+    """Enumerate disaggregated plans: pool split x per-pool Algorithm-1
+    schemes, each pool pruned by the shared weight-memory pre-filter.
+
+    ``decode_quant`` lets the decode pool run a different format (e.g. kv8
+    to stretch decode KV capacity while prefill stays fp16).  The default
+    ``feasible_only=True`` restricts pools to uniform DP/PP/TP schemes —
+    the cross-product of two unconstrained cell-DP spaces is rarely worth
+    simulating and real disaggregated stacks deploy uniform pools.
+    """
+    hbm = cluster.device.hbm_bytes
+    out: List[DisaggScheme] = []
+    per_pool_cache: dict = {}
+
+    def pool_candidates(n: int, q: str) -> List[ParallelScheme]:
+        key = (n, q)
+        if key not in per_pool_cache:
+            cands = generate_schemes(model, n, quant=q,
+                                     allow_cell_dp=not feasible_only,
+                                     max_model_dp=max_model_dp)
+            if feasible_only:
+                cands = [s for s in cands
+                         if s.is_feasible_for_current_systems()]
+            per_pool_cache[key] = prefilter_schemes(cands, hbm)
+        return per_pool_cache[key]
+
+    for p, d in pool_splits(cluster.num_devices):
+        for pre in pool_candidates(p, quant):
+            for dec in pool_candidates(d, decode_quant or quant):
+                out.append(DisaggScheme(prefill=pre, decode=dec,
+                                        transfer_mode=transfer_mode))
+                if len(out) >= max_plans:
+                    return out
+    return out

@@ -1,0 +1,208 @@
+"""Coupled two-pool simulation of disaggregated prefill/decode serving.
+
+The prefill pool runs prefill-only iterations (requests truncated to their
+first token), finished prompts hand their KV cache to the decode pool
+through the KV-transfer model, and the decode pool runs decode-only
+continuous batching with *transfer-delayed admissions*: a request becomes
+visible to the decode pool only at
+
+    prefill_finish + transfer_delay(ctx_len, transfer_mode).
+
+Both pools are ordinary ``BatchingModule`` instances driven by their own
+``PlanSimulator`` iteration-cost callbacks — the decode pool in
+``role="decode"`` (admission materializes the shipped prompt KV).  Both
+pools share one virtual clock origin, so the merged per-request records
+(TTFT from the prefill pool, completion from the decode pool) compose into
+the same ``SimulationReport`` the colocated simulator emits, and the joint
+search (core/search.py) ranks colocated and disaggregated plans under one
+objective.
+
+First-order modeling choices, in the open:
+  * per-request transfers are independent (no cross-pool link congestion);
+  * prefill-side KV is freed at handoff (no holding cost while draining);
+  * a decode-pool preemption re-fetches KV for free (see batching.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from ..core.batching import (BatchingModule, BatchingPolicy, BatchingResult,
+                             RequestRecord)
+from ..core.profiles import CollectiveModel, ProfileStore
+from ..core.simulator import PlanSimulator, SimulationReport, _p95
+from ..core.trace import Request
+from ..serving.router import BacklogBalancer
+from .kv_transfer import KVTransferModel
+from .pools import DisaggPlan
+
+
+class DisaggSimulator:
+    """Costs one DisaggPlan by running its two pools against one trace."""
+
+    def __init__(self, plan: DisaggPlan, store: ProfileStore,
+                 coll: CollectiveModel,
+                 kv_model: Optional[KVTransferModel] = None):
+        self.plan = plan
+        self.scheme = plan.scheme
+        self.kv = kv_model or KVTransferModel(coll,
+                                              plan.scheme.transfer_mode)
+        if self.kv.mode != plan.scheme.transfer_mode:
+            raise ValueError(
+                f"kv_model mode {self.kv.mode!r} != scheme transfer mode "
+                f"{plan.scheme.transfer_mode!r}")
+        self.pre_sim = PlanSimulator(plan.prefill_plan, store, coll)
+        self.dec_sim = PlanSimulator(plan.decode_plan, store, coll)
+
+    # -- helpers --------------------------------------------------------------
+
+    def _infeasible(self) -> SimulationReport:
+        return SimulationReport(
+            plan_label=self.scheme.label(), e2e_latency=float("inf"),
+            total_energy=float("inf"), ttft_mean=0, ttft_p95=0,
+            tpot_mean=0, tpot_p95=0, latency_p95=0, throughput_tok_s=0,
+            mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
+            peak_batch=0, feasible=False)
+
+    @staticmethod
+    def _route(requests: Sequence[Request], n_replicas: int, cost_of,
+               drain_rate: float) -> List[List[Request]]:
+        """Decayed shortest-queue dispatch across a pool's replicas — the
+        same balancer (and per-pool drain rates) the serving PoolRouter
+        uses (serving/router.py), so simulated and real dispatch agree."""
+        bal = BacklogBalancer(n_replicas, drain_rate=drain_rate)
+        buckets: List[List[Request]] = [[] for _ in range(n_replicas)]
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            buckets[bal.assign(r.arrival, cost_of(r))].append(r)
+        return buckets
+
+    # -- full-trace simulation ------------------------------------------------
+
+    def simulate(self, requests: Sequence[Request],
+                 policy: Optional[BatchingPolicy] = None,
+                 keep_records: bool = False) -> SimulationReport:
+        policy = policy or BatchingPolicy()
+        if policy.mode == "static":
+            # static batching has no meaningful decode-only pool (the
+            # strawman prefills and drains one batch at a time); report
+            # the plan as infeasible rather than crash mid-search
+            return self._infeasible()
+        # the pool simulators' MFU/MBU accumulators are driven through
+        # iteration_cost (not their own simulate()), so reset them here
+        for sim in (self.pre_sim, self.dec_sim):
+            sim._flops_accum = 0.0
+            sim._bytes_accum = 0.0
+        pre_s, dec_s = self.scheme.prefill, self.scheme.decode
+        hbm = self.plan.cluster.device.hbm_bytes
+        pre_cap = pre_s.kv_token_capacity(hbm)
+        dec_cap = dec_s.kv_token_capacity(hbm)
+        if pre_cap <= 0 or dec_cap <= 0:
+            return self._infeasible()
+
+        is_encdec = self.scheme.model.encoder is not None
+
+        # ---- prefill pool: prefill-only iterations ----
+        pre_reqs = [dataclasses.replace(r, gen_len=1) for r in requests]
+        pre_buckets = self._route(pre_reqs, pre_s.model_dp,
+                                  lambda r: float(r.context_len),
+                                  drain_rate=4096.0)
+        pre_results: List[BatchingResult] = []
+        for bucket in pre_buckets:
+            if not bucket:
+                continue
+            module = BatchingModule(pre_cap, policy,
+                                    model_windows=self.pre_sim.windows,
+                                    is_encdec=is_encdec)
+            pre_results.append(module.run(bucket,
+                                          self.pre_sim.iteration_cost))
+        pre_records: Dict[int, RequestRecord] = {
+            rec.rid: rec for res in pre_results for rec in res.records}
+
+        # ---- KV handoff: transfer-delayed decode admission ----
+        # gen_len <= 1 requests finish at the prefill pool and never ship
+        by_rid = {r.rid: r for r in requests}
+        lanes = min(pre_s.devices_per_replica, dec_s.devices_per_replica)
+        transfer_energy = 0.0
+        dec_reqs: List[Request] = []
+        for rid, rec in pre_records.items():
+            req = by_rid[rid]
+            if req.gen_len <= 1:
+                continue
+            est = self.kv.estimate(self.scheme.model, req.context_len,
+                                   pre_s.quant, self.plan.transfer_span,
+                                   lanes=lanes)
+            transfer_energy += est.energy_j
+            ready = rec.finish_time + est.delay_s
+            dec_reqs.append(dataclasses.replace(req, arrival=ready))
+
+        # ---- decode pool: decode-only continuous batching ----
+        dec_buckets = self._route(dec_reqs, dec_s.model_dp,
+                                  lambda r: float(r.gen_len),
+                                  drain_rate=512.0)
+        dec_results: List[BatchingResult] = []
+        for bucket in dec_buckets:
+            if not bucket:
+                continue
+            module = BatchingModule(dec_cap, policy,
+                                    model_windows=self.dec_sim.windows,
+                                    is_encdec=is_encdec, role="decode")
+            dec_results.append(module.run(bucket,
+                                          self.dec_sim.iteration_cost))
+        dec_records: Dict[int, RequestRecord] = {
+            rec.rid: rec for res in dec_results for rec in res.records}
+
+        # ---- merge per-request records across the two pools ----
+        merged: List[RequestRecord] = []
+        for rid, pre_rec in sorted(pre_records.items()):
+            req = by_rid[rid]
+            rec = RequestRecord(rid, req.arrival, req.context_len,
+                                req.gen_len)
+            rec.first_token_time = pre_rec.first_token_time
+            dec_rec = dec_records.get(rid)
+            if dec_rec is not None:
+                rec.finish_time = dec_rec.finish_time
+                rec.preemptions = pre_rec.preemptions + dec_rec.preemptions
+            else:                      # gen_len == 1: done at prefill
+                rec.finish_time = pre_rec.finish_time
+                rec.preemptions = pre_rec.preemptions
+            merged.append(rec)
+
+        ttfts = [r.ttft for r in merged]
+        tpots = [r.tpot for r in merged if r.gen_len > 1]
+        e2es = [r.e2e for r in merged]
+        results = pre_results + dec_results
+        if not results:
+            return self._infeasible()
+        total_time = max(res.total_time for res in results)
+        total_energy = (sum(res.total_energy for res in results)
+                        + transfer_energy)
+        gen_tokens = sum(r.gen_len for r in merged)
+
+        n_dev = self.scheme.total_devices
+        dev = self.plan.cluster.device
+        q = self.pre_sim.q
+        flops = self.pre_sim._flops_accum + self.dec_sim._flops_accum
+        nbytes = self.pre_sim._bytes_accum + self.dec_sim._bytes_accum
+        peak = dev.flops(q.compute_dtype)
+        mfu = flops / (total_time * n_dev * peak) if total_time > 0 else 0.0
+        mbu = (nbytes / (total_time * n_dev * dev.hbm_bw)
+               if total_time > 0 else 0.0)
+
+        return SimulationReport(
+            plan_label=self.scheme.label(),
+            e2e_latency=total_time,
+            total_energy=total_energy,
+            ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            ttft_p95=_p95(ttfts),
+            tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
+            tpot_p95=_p95(tpots),
+            latency_p95=_p95(e2es),
+            throughput_tok_s=gen_tokens / total_time if total_time else 0.0,
+            mfu=min(mfu, 1.0), mbu=min(mbu, 1.0),
+            iterations=sum(r.iterations for r in results),
+            preemptions=sum(r.preemptions for r in results),
+            peak_kv_tokens=max(r.peak_kv_tokens for r in results),
+            peak_batch=max(r.peak_batch for r in results),
+            feasible=True,
+            records=merged if keep_records else None)

@@ -3,9 +3,20 @@
 Mirrors the APEX Batching Module's semantics (core/batching.py) so
 prediction-vs-reality fidelity experiments (paper Fig. 6/7) compare like
 for like.
+
+``ServingEngine``/``EngineReport`` are imported lazily (PEP 562): the
+router and the disaggregated simulator only need the jax-free dispatch
+logic, so importing this package must not pay the JAX startup cost.
 """
 
-from .engine import EngineReport, ServingEngine
-from .router import ReplicaRouter
+from .router import BacklogBalancer, PoolRouter, ReplicaRouter
 
-__all__ = ["EngineReport", "ReplicaRouter", "ServingEngine"]
+__all__ = ["BacklogBalancer", "EngineReport", "PoolRouter", "ReplicaRouter",
+           "ServingEngine"]
+
+
+def __getattr__(name):
+    if name in ("EngineReport", "ServingEngine"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,5 +1,8 @@
 """Property-based tests for the dynamism-aware Batching Module (§3.3)."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,0 +1,283 @@
+"""Disaggregated serving subsystem + trace synthesis invariants.
+
+Covers the PR-1 satellite checklist: trace determinism / moment matching,
+the KV-transfer byte/time model against hand-computed values, the
+decayed-backlog router fix, the SearchResult objective fix, and an
+end-to-end coupled two-pool simulation smoke test.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (ApexSearch, BatchingModule, BatchingPolicy,
+                        CollectiveModel, get_format, get_trace,
+                        h100_multinode, h100_node, ir_from_hf_config,
+                        synthesize_trace, trace_stats)
+from repro.core.search import OBJECTIVES, SearchResult
+from repro.core.simulator import SimulationReport
+from repro.core.trace import TRACE_SPECS, Request
+from repro.disagg import (DisaggScheme, DisaggSimulator, KVTransferModel,
+                          cross_pool_span, generate_disagg_schemes,
+                          map_disagg_scheme)
+from repro.serving.router import BacklogBalancer
+
+SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+
+
+def small_model():
+    return ir_from_hf_config(SMALL, name="tiny")
+
+
+# ---------------------------------------------------------------------------
+# trace synthesis: determinism + moment matching
+# ---------------------------------------------------------------------------
+
+def test_trace_same_seed_reproducible():
+    spec = TRACE_SPECS["chat"]
+    a = synthesize_trace(spec, arrival_rate=1.0, seed=7)
+    b = synthesize_trace(spec, arrival_rate=1.0, seed=7)
+    assert a == b
+
+
+def test_trace_seed_changes_trace():
+    spec = TRACE_SPECS["chat"]
+    a = synthesize_trace(spec, arrival_rate=1.0, seed=1)
+    b = synthesize_trace(spec, arrival_rate=1.0, seed=2)
+    assert a != b
+
+
+@pytest.mark.parametrize("name", sorted(TRACE_SPECS))
+def test_trace_moments_match_spec(name):
+    spec = TRACE_SPECS[name]
+    reqs = synthesize_trace(spec, arrival_rate=1.0, seed=0,
+                            num_requests=4000)
+    stats = trace_stats(reqs)
+    # 4000 log-normal samples: means within ~3 stderr of the target
+    for key, mean, std in (("ctx_mean", spec.ctx_mean, spec.ctx_std),
+                           ("gen_mean", spec.gen_mean, spec.gen_std)):
+        tol = 3.5 * std / math.sqrt(len(reqs)) + 0.02 * mean
+        assert abs(stats[key] - mean) < tol, (key, stats[key], mean)
+
+
+# ---------------------------------------------------------------------------
+# KV-transfer byte/time model vs hand-computed values
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_hand_computed():
+    model = small_model()
+    coll = CollectiveModel(h100_multinode(2, 8))
+    kv = KVTransferModel(coll, mode="blocking")
+    q = get_format("fp16")
+    # layers x 2(K,V) x kv_heads x head_dim x kv_bytes x ctx
+    expected = 4 * 2 * 4 * 32 * q.kv_bytes * 1000
+    assert kv.kv_bytes(model, 1000, "fp16") == pytest.approx(expected)
+    # kv8 halves the payload
+    assert kv.kv_bytes(model, 1000, "kv8") == pytest.approx(expected / 2)
+
+
+def test_kv_transfer_time_hand_computed():
+    cluster = h100_multinode(2, 8)
+    coll = CollectiveModel(cluster)
+    model = small_model()
+    ctx, lanes, span = 1000, 2, 16
+    nbytes = 4 * 2 * 4 * 32 * 2.0 * ctx
+    ib = cluster.levels[1]          # span 16 -> infiniband
+    wire = (nbytes / lanes) / ib.bw_per_device + ib.launch_s + ib.latency_s
+
+    blocking = KVTransferModel(coll, mode="blocking")
+    est = blocking.estimate(model, ctx, "fp16", span, lanes=lanes)
+    assert est.nbytes == pytest.approx(nbytes)
+    assert est.delay_s == pytest.approx(wire)
+    assert est.wire_s == pytest.approx(wire)
+    assert est.energy_j > 0
+
+    layerwise = KVTransferModel(coll, mode="layerwise")
+    est_l = layerwise.estimate(model, ctx, "fp16", span, lanes=lanes)
+    per_layer = (nbytes / (lanes * 4)) / ib.bw_per_device \
+        + ib.launch_s + ib.latency_s
+    assert est_l.delay_s == pytest.approx(per_layer)
+    assert est_l.wire_s == pytest.approx(wire)
+    assert est_l.delay_s < est.delay_s
+
+
+def test_cross_pool_span_picks_mapper_level():
+    cluster = h100_multinode(2, 8)
+    # split at 8: pools on different nodes -> the IB level
+    assert cross_pool_span(cluster, 8) == 16
+    assert cluster.level_for_group(cross_pool_span(cluster, 8)).name \
+        == "infiniband"
+    # split at 4: both pools inside one NVLink group
+    assert cross_pool_span(cluster, 4) == 2
+    assert cluster.level_for_group(cross_pool_span(cluster, 4)).name \
+        == "nvlink"
+
+
+# ---------------------------------------------------------------------------
+# pool enumeration: weight-memory pre-filter path
+# ---------------------------------------------------------------------------
+
+def test_infeasible_pool_splits_rejected():
+    big = ir_from_hf_config(
+        dict(hidden_size=8192, num_hidden_layers=80,
+             num_attention_heads=64, num_key_value_heads=8,
+             intermediate_size=28672, vocab_size=128256), name="llama70b")
+    cluster = h100_multinode(2, 8)
+    cap = cluster.device.hbm_bytes * 0.92
+    schemes = generate_disagg_schemes(big, cluster, max_plans=100000)
+    assert schemes, "some split must fit"
+    for s in schemes:
+        assert s.prefill.weight_bytes_per_device() < cap
+        assert s.decode.weight_bytes_per_device() < cap
+        assert s.total_devices == cluster.num_devices
+    # a 1-device pool cannot hold 140 GB of weights -> no such split
+    assert all(s.prefill_devices > 1 and s.decode_devices > 1
+               for s in schemes)
+
+
+# ---------------------------------------------------------------------------
+# decode-role batching
+# ---------------------------------------------------------------------------
+
+def test_decode_role_runs_no_prefill_tokens():
+    seen = []
+
+    def step_cost(w):
+        seen.append(w)
+        return 1e-3, 1e-2
+
+    reqs = [Request(rid=i, arrival=0.0, context_len=64, gen_len=8)
+            for i in range(4)]
+    mod = BatchingModule(10000, BatchingPolicy(fast_forward=False),
+                         role="decode")
+    res = mod.run(reqs, step_cost)
+    assert all(w.prefill_tokens == 0 for w in seen)
+    assert all(rec.finish_time > 0 for rec in res.records)
+    # each request decodes gen_len - 1 tokens here (token 1 came from the
+    # prefill pool); KV includes the shipped prompt
+    assert res.peak_kv_tokens >= 4 * 65
+
+
+def test_decode_role_gen1_finishes_instantly():
+    reqs = [Request(rid=0, arrival=0.5, context_len=32, gen_len=1)]
+    mod = BatchingModule(1000, BatchingPolicy(), role="decode")
+    res = mod.run(reqs, lambda w: (1e-3, 0.0))
+    assert res.records[0].finish_time == pytest.approx(0.5)
+    assert res.iterations == 0
+
+
+# ---------------------------------------------------------------------------
+# router: decayed backlog
+# ---------------------------------------------------------------------------
+
+def test_backlog_decays_with_arrival_gaps():
+    bal = BacklogBalancer(2, drain_rate=100.0)
+    assert bal.assign(0.0, 1000.0) == 0
+    # immediately after, replica 1 is emptier
+    assert bal.assign(0.0, 10.0) == 1
+    # 100 s later both replicas have fully drained; assignment must not
+    # remember the old 1000-token backlog (the monotonic-accumulation bug)
+    i = bal.assign(100.0, 10.0)
+    assert bal.backlog[0] <= 10.0 + 1e-9 and bal.backlog[1] <= 20.0
+    assert i in (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# SearchResult.top ranks by the search's own objective
+# ---------------------------------------------------------------------------
+
+def _mk_report(label, e2e, energy):
+    return SimulationReport(
+        plan_label=label, e2e_latency=e2e, total_energy=energy,
+        ttft_mean=0, ttft_p95=0, tpot_mean=0, tpot_p95=0, latency_p95=0,
+        throughput_tok_s=0, mfu=0, mbu=0, iterations=1, preemptions=0,
+        peak_kv_tokens=1, peak_batch=1, feasible=True)
+
+
+def test_search_result_top_respects_objective():
+    fast_hot = _mk_report("fast-hot", e2e=1.0, energy=100.0)
+    slow_cool = _mk_report("slow-cool", e2e=2.0, energy=10.0)
+    res = SearchResult(best=slow_cool, best_plan=None,
+                       all_reports=[fast_hot, slow_cool], num_schemes=2,
+                       num_feasible=2, search_seconds=0.0,
+                       objective="energy")
+    assert res.top(1)[0].plan_label == "slow-cool"
+    res_lat = SearchResult(best=fast_hot, best_plan=None,
+                           all_reports=[fast_hot, slow_cool],
+                           num_schemes=2, num_feasible=2,
+                           search_seconds=0.0, objective="latency")
+    assert res_lat.top(1)[0].plan_label == "fast-hot"
+
+
+# ---------------------------------------------------------------------------
+# coupled two-pool simulation end to end
+# ---------------------------------------------------------------------------
+
+def _simulate_disagg(scheme, reqs, cluster):
+    search = ApexSearch(small_model(), cluster)
+    plan = map_disagg_scheme(scheme, cluster)
+    sim = DisaggSimulator(plan, search.store, search.coll)
+    return sim.simulate(reqs, keep_records=True)
+
+
+def test_disagg_simulation_end_to_end():
+    cluster = h100_node(8)
+    model = small_model()
+    schemes = generate_disagg_schemes(model, cluster, max_plans=100000)
+    scheme = next(s for s in schemes
+                  if s.prefill_devices == 4 and s.decode_devices == 4
+                  and s.prefill.model_dp == 1 and s.decode.model_dp == 1)
+    reqs = get_trace("chat", arrival_rate=4.0, seed=3, num_requests=40)
+    rep = _simulate_disagg(scheme, reqs, cluster)
+    assert rep.feasible
+    assert rep.records is not None and len(rep.records) == len(reqs)
+    for rec in rep.records:
+        assert rec.first_token_time >= rec.arrival
+        assert rec.finish_time >= rec.first_token_time
+        if rec.gen_len > 1:
+            assert rec.tpot > 0
+    assert rep.ttft_p95 > 0 and rep.e2e_latency > 0
+    assert rep.e2e_latency >= max(r.finish_time for r in rep.records) - 1e-9
+
+    # determinism: identical inputs -> identical report
+    rep2 = _simulate_disagg(scheme, reqs, cluster)
+    assert rep.e2e_latency == rep2.e2e_latency
+    assert rep.ttft_p95 == rep2.ttft_p95
+    assert rep.tpot_p95 == rep2.tpot_p95
+    assert rep.total_energy == rep2.total_energy
+
+
+def test_blocking_transfer_delays_decode():
+    """Blocking KV handoff must not finish earlier than layerwise."""
+    cluster = h100_multinode(2, 8)   # cross-node handoff: visible cost
+    model = small_model()
+    schemes = generate_disagg_schemes(model, cluster, max_plans=100000)
+    base = next(s for s in schemes
+                if s.prefill_devices == 8 and s.prefill.model_dp == 1
+                and s.decode.model_dp == 1)
+    reqs = get_trace("summarization", arrival_rate=2.0, seed=1,
+                     num_requests=24)
+    lw = _simulate_disagg(base, reqs, cluster)
+    import dataclasses
+    blocking = dataclasses.replace(base, transfer_mode="blocking")
+    bl = _simulate_disagg(blocking, reqs, cluster)
+    assert bl.feasible and lw.feasible
+    assert bl.e2e_latency >= lw.e2e_latency - 1e-9
+    assert bl.tpot_p95 >= lw.tpot_p95 - 1e-9
+
+
+def test_joint_search_ranks_both_families():
+    model = small_model()
+    cluster = h100_node(8)
+    reqs = get_trace("chat", arrival_rate=4.0, seed=0, num_requests=32)
+    search = ApexSearch(model, cluster)
+    res = search.search(reqs, objective="ttft", feasible_only=True,
+                        disaggregated=True, max_disagg_plans=64)
+    labels = [r.plan_label for r in res.all_reports]
+    assert any(l.startswith("disagg[") for l in labels)
+    assert any(not l.startswith("disagg[") for l in labels)
+    assert res.objective == "ttft"
+    # best-by-objective really is the argmin over feasible reports
+    feas = [r for r in res.all_reports if r.feasible]
+    assert res.best.ttft_p95 == min(OBJECTIVES["ttft"](r) for r in feas)

@@ -1,5 +1,8 @@
 """Property-based tests for Algorithm 1 (scheme generation) + mapper."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,7 +1,9 @@
 """Simulator invariants: interpolation, scaling, quantization, energy."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (AnalyticBackend, ApexSearch, ProfileStore,
