@@ -1,4 +1,4 @@
-"""Colocated vs disaggregated TTFT/TPOT frontier.
+"""Colocated vs disaggregated TTFT/TPOT frontier (+ heterogeneous pools).
 
 Sweeps the three paper traces (summarization / creation / chat, §4.1
 Table 1) for a dense and a MoE model, runs the joint plan search
@@ -9,7 +9,14 @@ disaggregated plan strictly beats the best colocated plan's TTFT p95 *at
 comparable TPOT p95* (colocated candidates within ``TPOT_TOL`` of the
 disaggregated plan's TPOT are admitted to the comparison).
 
+``--hetero`` adds the heterogeneous-pool sweep: the same search with a
+pool MENU (H100+H200, H100+TPUv5e) so mixed-device plans — prefill on one
+part, decode on another — compete against every homogeneous plan, and the
+table reports where a mixed pool wins TTFT p95, TPOT p95, or energy.
+
 Run:  PYTHONPATH=src python benchmarks/disagg_frontier.py [--requests N]
+      PYTHONPATH=src python benchmarks/disagg_frontier.py --hetero
+      PYTHONPATH=src python benchmarks/disagg_frontier.py --smoke
 or:   PYTHONPATH=src python -m benchmarks.run --only disagg
 """
 
@@ -17,8 +24,10 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import (ApexSearch, BatchingPolicy, get_trace,
-                        h100_multinode, ir_from_hf_config)
+from repro.core import (ApexSearch, BatchingPolicy, get_trace, h100_node,
+                        h100_multinode, h200_node, ir_from_hf_config,
+                        tpu_v5e_pod)
+from repro.disagg import is_mixed_label
 
 try:
     from .common import PAPER_MODELS, Timer, csv_row
@@ -35,6 +44,14 @@ TRACES = ["summarization", "creation", "chat"]
 # every plan look alike).
 RATES = {"summarization": 1.0, "creation": 1.0, "chat": 2.0}
 TPOT_TOL = 1.10      # "comparable TPOT": within 10% of the disagg plan's
+
+# Heterogeneous pool menus: each entry is the per-pool cluster choices the
+# search may pair (prefill from one, decode from the other — or same).
+HETERO_MENUS = {
+    "h100+h200": lambda: [h100_node(8), h200_node(8)],
+    "h100+tpuv5e": lambda: [h100_node(8),
+                            tpu_v5e_pod(chips=16, ring_group=16)],
+}
 
 
 def pareto(reports):
@@ -120,11 +137,112 @@ def _frontier(cluster, requests: int) -> int:
     return wins
 
 
+def _hetero(requests: int, menus=None, models=None, traces=None,
+            max_disagg_plans: int = 96) -> int:
+    """Mixed-device pools vs the best homogeneous plan (colocated OR
+    same-device disagg) on TTFT p95 / TPOT p95 / energy.  Returns the
+    number of (menu, model, trace) points where a mixed pool wins at
+    least one metric."""
+    menus = menus or {k: mk() for k, mk in HETERO_MENUS.items()}
+    models = models or list(MODELS)
+    traces = traces or TRACES
+    print(f"# hetero pools, {requests} requests/trace")
+    print(f"{'menu':<13} {'model':<14} {'trace':<14} {'family':<6} "
+          f"{'ttft_p95_ms':>11} {'tpot_p95_ms':>11} {'energy_kJ':>9}  plan")
+    wins = 0
+    for menu_name, menu in menus.items():
+        budget = sum(c.num_devices for c in menu)
+        cluster = h100_multinode(2, budget // 2) if budget % 2 == 0 \
+            else h100_multinode(1, budget)
+        for model_name in models:
+            model = ir_from_hf_config(PAPER_MODELS[model_name],
+                                      name=model_name)
+            for trace in traces:
+                reqs = get_trace(trace, arrival_rate=RATES[trace],
+                                 num_requests=requests, seed=0)
+                search = ApexSearch(model, cluster)
+                res = search.search(
+                    reqs, objective="ttft", feasible_only=True,
+                    disaggregated=True, pool_menu=menu,
+                    max_total_devices=budget,
+                    max_disagg_plans=max_disagg_plans,
+                    policy=BatchingPolicy(chunked_prefill=512))
+                feas = [r for r in res.all_reports if r.feasible]
+                mixed = [r for r in feas if is_mixed_label(r.plan_label)]
+                homog = [r for r in feas
+                         if not is_mixed_label(r.plan_label)]
+                if not mixed or not homog:
+                    print(f"{menu_name:<13} {model_name:<14} {trace:<14} "
+                          f">> no {'mixed' if not mixed else 'homog'} "
+                          f"plan feasible")
+                    continue
+                point_wins = []
+                for metric, key in (("ttft", lambda r: r.ttft_p95),
+                                    ("tpot", lambda r: r.tpot_p95),
+                                    ("energy",
+                                     lambda r: r.total_energy)):
+                    bm, bh = min(mixed, key=key), min(homog, key=key)
+                    if key(bm) < key(bh):
+                        point_wins.append(metric)
+                for fam, best in (("homog", min(homog,
+                                                key=lambda r: r.ttft_p95)),
+                                  ("mixed", min(mixed,
+                                                key=lambda r: r.ttft_p95))):
+                    print(f"{menu_name:<13} {model_name:<14} {trace:<14} "
+                          f"{fam:<6} {best.ttft_p95 * 1e3:>11.1f} "
+                          f"{best.tpot_p95 * 1e3:>11.2f} "
+                          f"{best.total_energy / 1e3:>9.2f}  "
+                          f"{best.plan_label[:60]}")
+                if point_wins:
+                    wins += 1
+                    print(f"{'':<13} {'':<14} {'':<14} >> mixed pools win: "
+                          f"{', '.join(point_wins)}")
+                else:
+                    print(f"{'':<13} {'':<14} {'':<14} >> homogeneous "
+                          f"wins every metric")
+    print(f"# mixed-pool wins on >=1 metric: {wins} points")
+    return wins
+
+
+def run_hetero(quick: bool = False, requests: int = 64) -> int:
+    if quick:
+        requests = 32
+    with Timer() as t:
+        wins = _hetero(requests)
+    csv_row("disagg_hetero", t.seconds * 1e6, f"mixed_wins={wins}")
+    return wins
+
+
+def smoke() -> int:
+    """CI smoke: a tiny model through BOTH sweeps in seconds, so the
+    benchmark entry points can't silently rot."""
+    global MODELS, RATES
+    tiny = dict(hidden_size=256, num_hidden_layers=4,
+                num_attention_heads=8, num_key_value_heads=4,
+                intermediate_size=1024, vocab_size=1024)
+    PAPER_MODELS["tiny"] = tiny
+    MODELS = {"tiny": "dense"}
+    RATES = dict(RATES, chat=4.0)
+    wins = _frontier(h100_node(4), requests=16)
+    hwins = _hetero(16, menus={"h100+h200": [h100_node(2), h200_node(2)]},
+                    models=["tiny"], traces=["chat"], max_disagg_plans=32)
+    print(f"# smoke complete (ttft_wins={wins}, mixed_wins={hwins})")
+    return 0
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=96)
     ap.add_argument("--nodes", type=int, default=2)
     ap.add_argument("--gpus-per-node", type=int, default=8)
+    ap.add_argument("--hetero", action="store_true",
+                    help="run the heterogeneous-pool sweep instead")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-model CI smoke of both sweeps")
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    if args.hetero:
+        raise SystemExit(0 if run_hetero(requests=args.requests) > 0 else 1)
     raise SystemExit(0 if run(requests=args.requests, nodes=args.nodes,
                               gpus_per_node=args.gpus_per_node) > 0 else 1)

@@ -1,13 +1,16 @@
 """Disaggregated prefill/decode plan search (repro.disagg).
 
 Searches colocated AND two-pool disaggregated plans jointly under a TTFT
-objective, then prints the winner and the best plan of each family.
+objective, then prints the winner and the best plan of each family —
+including HETEROGENEOUS pools (H100 prefill / H200 decode) drawn from a
+pool menu.
 
 Run:  PYTHONPATH=src python examples/disagg_search.py
 """
 
-from repro.core import ApexSearch, get_trace, h100_multinode, \
-    ir_from_hf_config
+from repro.core import ApexSearch, get_trace, h100_multinode, h100_node, \
+    h200_node, ir_from_hf_config
+from repro.disagg import is_mixed_label
 
 model = ir_from_hf_config(
     dict(hidden_size=5120, num_hidden_layers=64, num_attention_heads=40,
@@ -18,7 +21,10 @@ requests = get_trace("chat", arrival_rate=2.0, num_requests=96)
 
 search = ApexSearch(model, cluster)
 result = search.search(requests, objective="ttft", feasible_only=True,
-                       disaggregated=True)
+                       disaggregated=True,
+                       # hetero candidates: every (prefill, decode) device
+                       # assignment from the menu within the 16-GPU budget
+                       pool_menu=[h100_node(8), h200_node(8)])
 
 print(f"searched {result.num_schemes} plans "
       f"({result.num_feasible} feasible) in "
@@ -27,9 +33,15 @@ print("winner:", result.best.summary(), "\n")
 
 feasible = [r for r in result.all_reports if r.feasible]
 for family, match in (("colocated", lambda l: not l.startswith("disagg[")),
-                      ("disaggregated", lambda l: l.startswith("disagg["))):
+                      ("disaggregated", lambda l: l.startswith("disagg[")
+                       and not is_mixed_label(l)),
+                      ("hetero pools", is_mixed_label)):
     fam = [r for r in feasible if match(r.plan_label)]
+    if not fam:
+        print(f"best {family}: (none feasible)")
+        continue
     best = min(fam, key=lambda r: r.ttft_p95)
     print(f"best {family}: TTFT p95 {best.ttft_p95 * 1e3:.1f}ms, "
-          f"TPOT p95 {best.tpot_p95 * 1e3:.2f}ms")
+          f"TPOT p95 {best.tpot_p95 * 1e3:.2f}ms, "
+          f"energy {best.total_energy / 1e3:.1f}kJ")
     print(f"  {best.plan_label}")

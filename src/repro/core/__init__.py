@@ -3,8 +3,9 @@ planning for LLM serving via dynamism-aware simulation."""
 
 from .batching import BatchingModule, BatchingPolicy, BatchingResult
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
-                      cpu_local, get_cluster, h100_multinode, h100_node,
-                      h200_node, tpu_v5e_multipod, tpu_v5e_pod)
+                      cpu_local, cross_pool_link, get_cluster,
+                      h100_multinode, h100_node, h200_node,
+                      tpu_v5e_multipod, tpu_v5e_pod)
 from .ir import (AttentionCell, Block, Cell, CrossAttentionCell, MLACell,
                  MLPCell, ModelIR, MoECell, OpCall, SSMCell, Workload,
                  ir_from_hf_config)
@@ -31,7 +32,8 @@ __all__ = [
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
     "QuantFormat", "Request", "SSMCell", "SearchResult", "SimulationReport",
     "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
-    "divisors", "generate_schemes", "get_cluster", "get_format", "get_trace",
+    "cross_pool_link", "divisors", "generate_schemes", "get_cluster",
+    "get_format", "get_trace",
     "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
     "ir_from_hf_config", "map_scheme", "prefilter_schemes",
     "register_format",

@@ -32,6 +32,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from .ir import Workload
 from .trace import Request
 
+RefetchDelay = Callable[[Request], float]
+
 
 @dataclasses.dataclass
 class BatchingPolicy:
@@ -86,6 +88,7 @@ class RequestRecord:
     first_token_time: float = 0.0
     finish_time: float = 0.0
     preemptions: int = 0
+    refetch_s: float = 0.0        # KV re-fetch delay charged on re-admissions
 
     @property
     def ttft(self) -> float:
@@ -111,6 +114,7 @@ class BatchingResult:
     preemptions: int
     peak_kv_tokens: int
     peak_batch: int
+    kv_refetch_s: float = 0.0     # total re-fetch delay across all victims
 
 
 StepCost = Callable[[Workload], Tuple[float, float]]
@@ -123,7 +127,8 @@ class BatchingModule:
                  model_windows: Sequence = (None,),
                  max_sequences: int = 512,
                  is_encdec: bool = False,
-                 role: str = "both"):
+                 role: str = "both",
+                 refetch_delay: Optional[RefetchDelay] = None):
         if kv_capacity_tokens <= 0:
             raise ValueError("plan has no KV capacity — infeasible")
         if role not in ("both", "decode"):
@@ -138,10 +143,15 @@ class BatchingModule:
         # materialized (shipped from the prefill pool), so admission starts
         # it mid-lifecycle — prefill done, first token produced — and only
         # decode iterations run here.  A preempted request loses its cache
-        # and is re-admitted the same way (models a KV re-fetch as free,
-        # which under-counts transfer traffic but keeps timing first-order:
-        # preemptions in a well-sized decode pool are rare).
+        # and must RE-FETCH it before re-admission: ``refetch_delay(req)``
+        # returns the seconds the victim waits before it becomes admissible
+        # again.  The coupled simulation passes the KV-transfer model's
+        # full-cache wire time (a re-fetch cannot stream behind a prefill
+        # that already happened); standalone use defaults to a re-prefill
+        # estimate priced through ``step_cost`` on the victim's prompt.
         self.role = role
+        self.refetch_delay = refetch_delay
+        self._refetch_cache: Dict[int, float] = {}
 
     # -- public entry ---------------------------------------------------------
 
@@ -157,6 +167,7 @@ class BatchingModule:
 
     def _run_continuous(self, requests: Sequence[Request],
                         step_cost: StepCost) -> BatchingResult:
+        self._refetch_cache.clear()
         pending: List[Request] = sorted(requests, key=lambda r: r.arrival)
         active: List[_Active] = []
         records: Dict[int, RequestRecord] = {
@@ -169,6 +180,7 @@ class BatchingModule:
         preemptions = 0
         peak_kv = 0
         peak_batch = 0
+        kv_refetch_s = 0.0
         new_admissions: List[_Active] = []
 
         def kv_used() -> int:
@@ -201,13 +213,15 @@ class BatchingModule:
                 if self.role == "decode":
                     # prompt KV arrived from the prefill pool; the first
                     # token was already emitted there.  Standalone records
-                    # stamp first-token at admission; a coupled simulation
-                    # (disagg/simulate.py) overwrites it with the prefill
-                    # pool's timestamp.
+                    # stamp first-token at FIRST admission only (a re-fetch
+                    # after preemption does not re-emit the first token); a
+                    # coupled simulation (disagg/simulate.py) overwrites it
+                    # with the prefill pool's timestamp.
                     a.prefill_done = req.context_len
                     a.generated = 1
                     a.first_token_time = now
-                    records[req.rid].first_token_time = now
+                    if records[req.rid].preemptions == 0:
+                        records[req.rid].first_token_time = now
                     if a.done:          # gen_len <= 1: nothing to decode
                         records[req.rid].finish_time = now
                         continue
@@ -262,6 +276,9 @@ class BatchingModule:
                         records[a.req.rid].finish_time = now
             for a in iter_decodes:
                 a.generated += 1
+            # sample peak BEFORE completions release their KV: the true
+            # peak includes each finishing request's final token
+            peak_kv = max(peak_kv, kv_used())
 
             finished = [a for a in active if a.done]
             for a in finished:
@@ -283,6 +300,11 @@ class BatchingModule:
                     now += d_mid * steps
                     energy += e_mid * steps
                     iters += steps
+                    # peak inside the run = KV total at the END of the run
+                    # (no arrival/completion/overflow can occur within it),
+                    # just before completions are removed
+                    peak_kv = max(peak_kv,
+                                  sum(kv_lens) + steps * len(active))
                     finished = [a for a in active if a.done]
                     for a in finished:
                         over = a.generated - a.req.gen_len
@@ -301,13 +323,48 @@ class BatchingModule:
                 victim.reset()
                 records[victim.req.rid].preemptions += 1
                 preemptions += 1
-                pending.insert(0, victim.req)
+                if self.role == "decode":
+                    # the shipped prompt KV was dropped; the victim only
+                    # becomes admissible again after re-fetching it
+                    delay = self._refetch(victim.req, step_cost)
+                    records[victim.req.rid].refetch_s += delay
+                    kv_refetch_s += delay
+                    ready = now + delay
+                    re_req = dataclasses.replace(victim.req, arrival=ready)
+                    idx = 0
+                    while (idx < len(pending)
+                           and pending[idx].arrival <= ready):
+                        idx += 1
+                    pending.insert(idx, re_req)
+                else:
+                    pending.insert(0, victim.req)
             peak_kv = max(peak_kv, kv_used())
 
         return BatchingResult(records=list(records.values()),
                               iterations=iters, total_time=now,
                               total_energy=energy, preemptions=preemptions,
-                              peak_kv_tokens=peak_kv, peak_batch=peak_batch)
+                              peak_kv_tokens=peak_kv, peak_batch=peak_batch,
+                              kv_refetch_s=kv_refetch_s)
+
+    def _refetch(self, req: Request, step_cost: StepCost) -> float:
+        """Seconds a preempted decode-role request waits for its prompt KV.
+
+        With a ``refetch_delay`` callback (the coupled disagg simulation
+        wires in the KV-transfer model), that is authoritative.  Standalone,
+        the cache must be re-materialized by a re-prefill, priced through
+        the same ``step_cost`` callback as every other iteration (time only
+        — the recompute runs on the prefill pool, not this one).
+        """
+        if req.rid not in self._refetch_cache:
+            if self.refetch_delay is not None:
+                delay = max(0.0, self.refetch_delay(req))
+            else:
+                w = Workload.from_batch(
+                    [(req.context_len, req.context_len)], [], self.windows,
+                    batch_sequences=1)
+                delay, _ = step_cost(w)
+            self._refetch_cache[req.rid] = delay
+        return self._refetch_cache[req.rid]
 
     def _ff_steps(self, active: List[_Active], pending: List[Request],
                   now: float, dur: float) -> int:
@@ -342,6 +399,12 @@ class BatchingModule:
                 batch.append(pending[i])
                 kv += pending[i].context_len
                 i += 1
+            if not batch:
+                # head prompt alone exceeds KV capacity: admit it solo and
+                # let it overshoot (the continuous path's liveness rule —
+                # refusing it would loop forever with no progress)
+                batch.append(pending[i])
+                i += 1
             now = max(now, max(r.arrival for r in batch))
             acts = [_Active(req=r, admitted_at=now, order=j)
                     for j, r in enumerate(batch)]
@@ -356,6 +419,10 @@ class BatchingModule:
                 a.prefill_done = a.req.context_len
                 a.generated = 1
                 records[a.req.rid].first_token_time = now
+                if a.done:            # gen_len == 1: done at prefill end,
+                    # not when the whole batch drains
+                    records[a.req.rid].finish_time = now
+            peak_kv = max(peak_kv, sum(a.kv_tokens for a in acts))
             # decode until ALL finish (the static-batching inefficiency)
             max_gen = max(r.gen_len for r in batch)
             for _ in range(1, max_gen):

@@ -135,6 +135,28 @@ class Cluster:
         return "\n".join(lines)
 
 
+def cross_pool_link(prefill: "Cluster", decode: "Cluster",
+                    name: str = "cross-pool") -> NetworkLevel:
+    """The network level joining two heterogeneous device pools.
+
+    Each pool injects onto the shared fabric through its own outermost
+    level; the joint link can move bytes no faster than the slower side, so
+    its per-device bandwidth is the MIN of the two pools' outermost
+    injection bandwidths, and latency/launch take the worse of the two.
+    Pass an explicit ``NetworkLevel`` to ``map_disagg_scheme`` instead when
+    the deployment's inter-pool wire is known (e.g. a dedicated RDMA
+    fabric slower than either pool's scale-out network).
+    """
+    a, b = prefill.levels[-1], decode.levels[-1]
+    return NetworkLevel(
+        name=name,
+        group_size=prefill.num_devices + decode.num_devices,
+        bw_per_device=min(a.bw_per_device, b.bw_per_device),
+        latency_s=max(a.latency_s, b.latency_s),
+        launch_s=max(a.launch_s, b.launch_s),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Device presets
 # ---------------------------------------------------------------------------

@@ -68,9 +68,24 @@ class ApexSearch:
                  grid_stride: int = 1):
         self.model = model
         self.cluster = cluster
+        self.freq_ghz = freq_ghz
+        self.grid_stride = grid_stride
         self.backend = backend or AnalyticBackend(cluster, freq_ghz=freq_ghz)
         self.store = ProfileStore(self.backend, grid_stride=grid_stride)
         self.coll = CollectiveModel(cluster, freq_ghz=freq_ghz)
+        # per-pool-cluster cost models for heterogeneous disagg candidates
+        self._pool_ctx: dict = {}
+
+    def _pool_cost_models(self, cluster: Cluster):
+        """(store, coll) for one pool cluster of a heterogeneous plan,
+        cached so every candidate pair sharing a pool reuses its tables."""
+        key = id(cluster)
+        if key not in self._pool_ctx:
+            backend = AnalyticBackend(cluster, freq_ghz=self.freq_ghz)
+            self._pool_ctx[key] = (
+                ProfileStore(backend, grid_stride=self.grid_stride),
+                CollectiveModel(cluster, freq_ghz=self.freq_ghz))
+        return self._pool_ctx[key]
 
     # -- single-plan evaluation -------------------------------------------------
 
@@ -105,12 +120,29 @@ class ApexSearch:
                transfer_mode: str = "layerwise",
                decode_quant: Optional[str] = None,
                max_disagg_plans: int = 256,
+               pool_menu: Optional[Sequence[Cluster]] = None,
+               max_total_devices: Optional[int] = None,
                progress: Optional[Callable[[int, int], None]] = None
                ) -> SearchResult:
         """Rank plans under ``objective``; with ``disaggregated=True`` the
         candidate set is the union of colocated schemes and two-pool
         disaggregated schemes (disagg/), scored by the same simulator
-        metrics so one objective ranks both families jointly."""
+        metrics so one objective ranks both families jointly.
+
+        ``pool_menu`` adds HETEROGENEOUS disaggregated candidates: every
+        ordered (prefill_cluster, decode_cluster) pair from the menu whose
+        combined device count fits ``max_total_devices`` (default: this
+        search's cluster size) is enumerated — e.g. a menu of
+        ``[h100_node(8), h200_node(8)]`` tries H100-prefill/H200-decode and
+        every other assignment (including same-device pairs — two separate
+        islands joined by a cross-pool link are a different deployment
+        from splitting one shared cluster, and are labeled with their pool
+        devices to stay distinguishable).  Each pool is costed on its own
+        cluster's analytic model; the KV handoff crosses the pair's
+        cross-pool link.  ``max_disagg_plans`` caps each disagg family
+        separately (the shared-cluster splits, and the menu pairs jointly)
+        — with a menu, up to ~2x that many disagg candidates simulate.
+        """
         t0 = _time.perf_counter()
         obj = OBJECTIVES[objective]
         schemes = generate_schemes(self.model, self.cluster.num_devices,
@@ -124,7 +156,7 @@ class ApexSearch:
         schemes = prefilter_schemes(schemes,
                                     self.cluster.device.hbm_bytes)
 
-        candidates: List[tuple] = [("colocated", s) for s in schemes]
+        candidates: List[tuple] = [("colocated", s, None) for s in schemes]
         kv_model = None
         if disaggregated:
             from ..disagg import (DisaggSimulator, KVTransferModel,
@@ -136,19 +168,46 @@ class ApexSearch:
                 feasible_only=True, transfer_mode=transfer_mode,
                 max_model_dp=max_model_dp, max_plans=max_disagg_plans)
             kv_model = KVTransferModel(self.coll, mode=transfer_mode)
-            candidates += [("disagg", s) for s in dschemes]
+            candidates += [("disagg", s, None) for s in dschemes]
+            if pool_menu:
+                budget = max_total_devices or self.cluster.num_devices
+                pairs = [(a, b) for a in pool_menu for b in pool_menu
+                         if a.num_devices + b.num_devices <= budget]
+                # menu pairs get their own candidate budget, split evenly
+                # so neither the shared-cluster split family nor an early
+                # pair starves the rest of slots
+                per_pair = max(1, max_disagg_plans // max(1, len(pairs)))
+                for pre_c, dec_c in pairs:
+                    hschemes = generate_disagg_schemes(
+                        self.model, quant=quant,
+                        decode_quant=decode_quant,
+                        feasible_only=True,
+                        transfer_mode=transfer_mode,
+                        max_model_dp=max_model_dp, max_plans=per_pair,
+                        prefill_cluster=pre_c, decode_cluster=dec_c)
+                    candidates += [("disagg", s, (pre_c, dec_c))
+                                   for s in hschemes]
 
         reports: List[SimulationReport] = []
         best: Optional[SimulationReport] = None
         best_plan = None
-        for i, (family, scheme) in enumerate(candidates):
+        for i, (family, scheme, pools) in enumerate(candidates):
             if family == "colocated":
                 plan = map_scheme(scheme, self.cluster)
                 sim = PlanSimulator(plan, self.store, self.coll)
-            else:
+            elif pools is None:
                 plan = map_disagg_scheme(scheme, self.cluster)
                 sim = DisaggSimulator(plan, self.store, self.coll,
                                       kv_model)
+            else:
+                pre_c, dec_c = pools
+                plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
+                                         decode_cluster=dec_c)
+                pre_store, pre_coll = self._pool_cost_models(pre_c)
+                dec_store, dec_coll = self._pool_cost_models(dec_c)
+                sim = DisaggSimulator(plan, pre_store, pre_coll,
+                                      decode_store=dec_store,
+                                      decode_coll=dec_coll)
             rep = sim.simulate(requests, policy=policy)
             reports.append(rep)
             if progress:

@@ -8,11 +8,12 @@ so colocated and disaggregated plans are ranked under one objective.
 
 from .kv_transfer import KVTransferModel, TransferEstimate
 from .pools import (DisaggPlan, DisaggScheme, cross_pool_span,
-                    generate_disagg_schemes, map_disagg_scheme, pool_splits)
+                    generate_disagg_schemes, is_mixed_label,
+                    map_disagg_scheme, pool_splits)
 from .simulate import DisaggSimulator
 
 __all__ = [
     "DisaggPlan", "DisaggScheme", "DisaggSimulator", "KVTransferModel",
     "TransferEstimate", "cross_pool_span", "generate_disagg_schemes",
-    "map_disagg_scheme", "pool_splits",
+    "is_mixed_label", "map_disagg_scheme", "pool_splits",
 ]

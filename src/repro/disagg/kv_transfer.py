@@ -32,7 +32,9 @@ concurrently.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
+from ..core.cluster import NetworkLevel
 from ..core.ir import ModelIR
 from ..core.profiles import CollectiveModel
 from ..core.quant import get_format
@@ -53,13 +55,38 @@ class TransferEstimate:
 
 
 class KVTransferModel:
-    """Per-request KV handoff: bytes from the IR, time from the cluster."""
+    """Per-request KV handoff: bytes from the IR, time from the cluster.
 
-    def __init__(self, coll: CollectiveModel, mode: str = "layerwise"):
+    Two costing modes for the wire itself:
+
+      * shared-cluster (``link=None``) — both pools live in ONE physical
+        cluster; the link is looked up in ``coll``'s cluster at the
+        transfer ``span`` (pools.cross_pool_span), exactly the PR-1 path.
+      * explicit link — heterogeneous pools are separate clusters joined by
+        a ``NetworkLevel`` (core.cluster.cross_pool_link: min of the two
+        pools' injection bandwidths); time follows the same p2p formula
+        (bytes/bw + launch + latency) and energy charges one endpoint
+        device per side through ``endpoint_powers`` (the prefill and
+        decode pools' own PowerModels).
+    """
+
+    def __init__(self, coll: CollectiveModel, mode: str = "layerwise",
+                 link: Optional[NetworkLevel] = None,
+                 endpoint_powers: Optional[Sequence] = None):
         if mode not in ("layerwise", "blocking"):
             raise ValueError(f"unknown transfer mode {mode!r}")
         self.coll = coll
         self.mode = mode
+        self.link = link
+        self.endpoint_powers = tuple(endpoint_powers) if endpoint_powers \
+            else (coll.power, coll.power)
+
+    def _link_query(self, nbytes: float) -> tuple:
+        """(time_s, energy_j) to move ``nbytes`` over the explicit link."""
+        lvl = self.link
+        t = nbytes / lvl.bw_per_device + lvl.launch_s + lvl.latency_s
+        e = sum(p.energy(t, utilization=0.15) for p in self.endpoint_powers)
+        return t, e
 
     def kv_bytes(self, model: ModelIR, ctx_len: int, quant: str) -> float:
         """Payload bytes for one request's cache at ``ctx_len`` tokens."""
@@ -79,12 +106,13 @@ class KVTransferModel:
         if nbytes <= 0:       # attention-free model: nothing to ship
             return TransferEstimate(0.0, 0.0, 0.0, 0.0)
         lanes = max(1, lanes)
-        wire, energy = self.coll.query("p2p", nbytes / lanes, span)
+        query = self._link_query if self.link is not None else \
+            (lambda b: self.coll.query("p2p", b, span))
+        wire, energy = query(nbytes / lanes)
         if self.mode == "blocking":
             delay = wire
         else:
             layers = max(1, model.block.repeat)
-            delay, _ = self.coll.query("p2p", nbytes / (lanes * layers),
-                                       span)
+            delay, _ = query(nbytes / (lanes * layers))
         return TransferEstimate(nbytes=nbytes, delay_s=delay, wire_s=wire,
                                 energy_j=energy)

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-from ..core.cluster import Cluster
+from ..core.cluster import Cluster, NetworkLevel, cross_pool_link
 from ..core.ir import ModelIR
 from ..core.mapper import ExecutionPlan, map_scheme
 from ..core.planner import (ParallelScheme, generate_schemes,
@@ -73,28 +73,86 @@ class DisaggScheme:
 
 @dataclasses.dataclass(frozen=True)
 class DisaggPlan:
-    """A physically-mapped disaggregated plan: two pool ExecutionPlans plus
-    the network span the KV handoff crosses."""
+    """A physically-mapped disaggregated plan: per-pool clusters + per-pool
+    ExecutionPlans, joined by the network the KV handoff crosses.
+
+    Two substrates:
+
+      * shared cluster (homogeneous) — both pools are contiguous id ranges
+        of ONE cluster (``prefill_cluster is decode_cluster``); the handoff
+        crosses the cluster-internal level at ``transfer_span`` and
+        ``cross_level`` is None.  This is the PR-1 path, byte-identical.
+      * per-pool clusters (heterogeneous) — each pool is its own cluster
+        with its own ``DeviceSpec`` (prefill on compute-heavy parts, decode
+        on HBM-bandwidth-heavy parts); the handoff crosses the explicit
+        ``cross_level`` (default: ``core.cluster.cross_pool_link``).
+    """
 
     scheme: DisaggScheme
-    cluster: Cluster
+    prefill_cluster: Cluster
+    decode_cluster: Cluster
     prefill_plan: ExecutionPlan
     decode_plan: ExecutionPlan
-    transfer_span: int        # devices spanned by the cross-pool link
+    transfer_span: int        # devices spanned by the in-cluster link
+    cross_level: Optional[NetworkLevel] = None   # explicit inter-pool link
+
+    @property
+    def homogeneous(self) -> bool:
+        return self.prefill_cluster is self.decode_cluster
+
+    @property
+    def cluster(self) -> Cluster:
+        """The single shared cluster (homogeneous plans only)."""
+        if not self.homogeneous:
+            raise ValueError(
+                "heterogeneous plan has per-pool clusters; use "
+                ".prefill_cluster / .decode_cluster")
+        return self.prefill_cluster
 
     def label(self) -> str:
-        return self.scheme.label()
+        # per-pool-cluster plans are ALWAYS suffixed with their pool
+        # devices — even a same-device island pair is different physics
+        # (cross-pool link, separate fabrics) from splitting one shared
+        # cluster, and downstream consumers classify families by label
+        if self.cross_level is None:
+            return self.scheme.label()
+        return (f"{self.scheme.label()}"
+                f"#{self.prefill_cluster.device.name}"
+                f">{self.decode_cluster.device.name}")
 
     def describe(self) -> str:
-        lvl = self.cluster.level_for_group(self.transfer_span)
+        if self.cross_level is not None:
+            lvl = self.cross_level
+            where = (f"{self.prefill_cluster.name}+"
+                     f"{self.decode_cluster.name}")
+        else:
+            lvl = self.prefill_cluster.level_for_group(self.transfer_span)
+            where = self.prefill_cluster.name
         return "\n".join([
-            f"disagg plan on {self.cluster.name} "
-            f"({self.scheme.prefill_devices} prefill + "
-            f"{self.scheme.decode_devices} decode devices, "
+            f"disagg plan on {where} "
+            f"({self.scheme.prefill_devices} prefill x "
+            f"{self.prefill_cluster.device.name} + "
+            f"{self.scheme.decode_devices} decode x "
+            f"{self.decode_cluster.device.name}, "
             f"KV handoff over {lvl.name}, {self.scheme.transfer_mode})",
             self.prefill_plan.describe(),
             self.decode_plan.describe(),
         ])
+
+
+def is_mixed_label(label: str) -> bool:
+    """True when a plan label names DIFFERENT devices for its two pools.
+
+    The single source of truth for the ``#pre>dec`` suffix
+    ``DisaggPlan.label()`` emits — benchmarks and examples classify plan
+    families through this helper instead of re-parsing the string.
+    Same-device island pairs (``#H200-SXM>H200-SXM``) and unsuffixed
+    shared-cluster plans both count as homogeneous.
+    """
+    if "#" not in label:
+        return False
+    pre, _, dec = label.rsplit("#", 1)[1].partition(">")
+    return pre != dec
 
 
 def cross_pool_span(cluster: Cluster, prefill_devices: int) -> int:
@@ -116,18 +174,50 @@ def cross_pool_span(cluster: Cluster, prefill_devices: int) -> int:
     return cluster.levels[-1].group_size
 
 
-def map_disagg_scheme(scheme: DisaggScheme, cluster: Cluster) -> DisaggPlan:
-    """Map both pools onto one cluster: prefill at offset 0, decode next."""
-    if scheme.total_devices > cluster.num_devices:
-        raise ValueError(
-            f"disagg scheme needs {scheme.total_devices} devices; cluster "
-            f"{cluster.name} has {cluster.num_devices}")
-    p = scheme.prefill_devices
+def map_disagg_scheme(scheme: DisaggScheme, cluster: Optional[Cluster] = None,
+                      *, prefill_cluster: Optional[Cluster] = None,
+                      decode_cluster: Optional[Cluster] = None,
+                      cross_level: Optional[NetworkLevel] = None
+                      ) -> DisaggPlan:
+    """Map both pools to physical devices.
+
+    With ``cluster``, both pools share one physical cluster: prefill at
+    offset 0, decode next (the homogeneous PR-1 path, unchanged).  With
+    ``prefill_cluster``/``decode_cluster``, each pool maps onto its OWN
+    cluster at offset 0 and the KV handoff crosses ``cross_level``
+    (default: ``cross_pool_link`` of the two clusters).
+    """
+    if cluster is not None:
+        if prefill_cluster is not None or decode_cluster is not None:
+            raise ValueError(
+                "pass either one shared cluster or per-pool clusters")
+        if scheme.total_devices > cluster.num_devices:
+            raise ValueError(
+                f"disagg scheme needs {scheme.total_devices} devices; "
+                f"cluster {cluster.name} has {cluster.num_devices}")
+        p = scheme.prefill_devices
+        return DisaggPlan(
+            scheme=scheme, prefill_cluster=cluster, decode_cluster=cluster,
+            prefill_plan=map_scheme(scheme.prefill, cluster,
+                                    device_offset=0),
+            decode_plan=map_scheme(scheme.decode, cluster, device_offset=p),
+            transfer_span=cross_pool_span(cluster, p))
+    if prefill_cluster is None or decode_cluster is None:
+        raise ValueError("need a shared cluster or BOTH per-pool clusters")
+    for pool, c, n in (("prefill", prefill_cluster, scheme.prefill_devices),
+                       ("decode", decode_cluster, scheme.decode_devices)):
+        if n > c.num_devices:
+            raise ValueError(
+                f"{pool} pool needs {n} devices; cluster {c.name} has "
+                f"{c.num_devices}")
     return DisaggPlan(
-        scheme=scheme, cluster=cluster,
-        prefill_plan=map_scheme(scheme.prefill, cluster, device_offset=0),
-        decode_plan=map_scheme(scheme.decode, cluster, device_offset=p),
-        transfer_span=cross_pool_span(cluster, p))
+        scheme=scheme, prefill_cluster=prefill_cluster,
+        decode_cluster=decode_cluster,
+        prefill_plan=map_scheme(scheme.prefill, prefill_cluster),
+        decode_plan=map_scheme(scheme.decode, decode_cluster),
+        transfer_span=2,
+        cross_level=cross_level or cross_pool_link(prefill_cluster,
+                                                   decode_cluster))
 
 
 def pool_splits(num_devices: int) -> List[Tuple[int, int]]:
@@ -135,15 +225,26 @@ def pool_splits(num_devices: int) -> List[Tuple[int, int]]:
     return [(p, num_devices - p) for p in range(1, num_devices)]
 
 
-def generate_disagg_schemes(model: ModelIR, cluster: Cluster,
+def generate_disagg_schemes(model: ModelIR,
+                            cluster: Optional[Cluster] = None,
                             quant: str = "fp16",
                             decode_quant: Optional[str] = None,
                             feasible_only: bool = True,
                             transfer_mode: str = "layerwise",
                             max_model_dp: Optional[int] = None,
-                            max_plans: int = 512) -> List[DisaggScheme]:
+                            max_plans: int = 512,
+                            prefill_cluster: Optional[Cluster] = None,
+                            decode_cluster: Optional[Cluster] = None
+                            ) -> List[DisaggScheme]:
     """Enumerate disaggregated plans: pool split x per-pool Algorithm-1
-    schemes, each pool pruned by the shared weight-memory pre-filter.
+    schemes, each pool pruned by ITS OWN device's weight-memory pre-filter.
+
+    With one shared ``cluster``, every (prefill, decode) split of its
+    devices is enumerated and both pools are filtered against the shared
+    device HBM (the homogeneous PR-1 path).  With per-pool clusters, the
+    split is fixed — each pool fills its own cluster — and each pool is
+    filtered against its OWN HBM, so e.g. a decode pool of H200s admits
+    schemes an H100 pool of the same width would reject.
 
     ``decode_quant`` lets the decode pool run a different format (e.g. kv8
     to stretch decode KV capacity while prefill stays fp16).  The default
@@ -151,12 +252,25 @@ def generate_disagg_schemes(model: ModelIR, cluster: Cluster,
     the cross-product of two unconstrained cell-DP spaces is rarely worth
     simulating and real disaggregated stacks deploy uniform pools.
     """
-    hbm = cluster.device.hbm_bytes
+    if (prefill_cluster is None) != (decode_cluster is None):
+        raise ValueError("need BOTH per-pool clusters (or neither)")
+    if prefill_cluster is not None:
+        if cluster is not None:
+            raise ValueError(
+                "pass either one shared cluster or per-pool clusters")
+        splits = [(prefill_cluster.num_devices, decode_cluster.num_devices)]
+        hbm_pre = prefill_cluster.device.hbm_bytes
+        hbm_dec = decode_cluster.device.hbm_bytes
+    else:
+        if cluster is None:
+            raise ValueError("need a shared cluster or per-pool clusters")
+        splits = pool_splits(cluster.num_devices)
+        hbm_pre = hbm_dec = cluster.device.hbm_bytes
     out: List[DisaggScheme] = []
     per_pool_cache: dict = {}
 
-    def pool_candidates(n: int, q: str) -> List[ParallelScheme]:
-        key = (n, q)
+    def pool_candidates(n: int, q: str, hbm: float) -> List[ParallelScheme]:
+        key = (n, q, hbm)
         if key not in per_pool_cache:
             cands = generate_schemes(model, n, quant=q,
                                      allow_cell_dp=not feasible_only,
@@ -167,9 +281,9 @@ def generate_disagg_schemes(model: ModelIR, cluster: Cluster,
             per_pool_cache[key] = prefilter_schemes(cands, hbm)
         return per_pool_cache[key]
 
-    for p, d in pool_splits(cluster.num_devices):
-        for pre in pool_candidates(p, quant):
-            for dec in pool_candidates(d, decode_quant or quant):
+    for p, d in splits:
+        for pre in pool_candidates(p, quant, hbm_pre):
+            for dec in pool_candidates(d, decode_quant or quant, hbm_dec):
                 out.append(DisaggScheme(prefill=pre, decode=dec,
                                         transfer_mode=transfer_mode))
                 if len(out) >= max_plans:

@@ -17,10 +17,19 @@ the same ``SimulationReport`` the colocated simulator emits, and the joint
 search (core/search.py) ranks colocated and disaggregated plans under one
 objective.
 
+Heterogeneous pools: when the plan carries per-pool clusters (different
+``DeviceSpec`` per pool), each pool's iteration costs, KV capacity, and
+energy come from its OWN cluster — per-pool ``ProfileStore`` /
+``CollectiveModel`` (and therefore each pool's own ``PowerModel``) — and
+the KV handoff is costed on the plan's explicit cross-pool network level.
+With a shared cluster this degenerates to the homogeneous PR-1 behavior.
+
 First-order modeling choices, in the open:
   * per-request transfers are independent (no cross-pool link congestion);
   * prefill-side KV is freed at handoff (no holding cost while draining);
-  * a decode-pool preemption re-fetches KV for free (see batching.py).
+  * a decode-pool preemption re-fetches its prompt KV through the same
+    KV-transfer model (full-cache wire time — a re-fetch cannot stream
+    behind a prefill that already happened) and its wire energy is charged.
 """
 
 from __future__ import annotations
@@ -30,7 +39,7 @@ from typing import Dict, List, Optional, Sequence
 
 from ..core.batching import (BatchingModule, BatchingPolicy, BatchingResult,
                              RequestRecord)
-from ..core.profiles import CollectiveModel, ProfileStore
+from ..core.profiles import AnalyticBackend, CollectiveModel, ProfileStore
 from ..core.simulator import PlanSimulator, SimulationReport, _p95
 from ..core.trace import Request
 from ..serving.router import BacklogBalancer
@@ -39,27 +48,52 @@ from .pools import DisaggPlan
 
 
 class DisaggSimulator:
-    """Costs one DisaggPlan by running its two pools against one trace."""
+    """Costs one DisaggPlan by running its two pools against one trace.
+
+    ``store``/``coll`` cost the prefill pool; ``decode_store``/
+    ``decode_coll`` the decode pool.  For homogeneous plans the decode-side
+    objects default to the prefill-side ones (one shared cluster); for
+    heterogeneous plans they default to fresh analytic models of the decode
+    pool's own cluster.
+    """
 
     def __init__(self, plan: DisaggPlan, store: ProfileStore,
                  coll: CollectiveModel,
-                 kv_model: Optional[KVTransferModel] = None):
+                 kv_model: Optional[KVTransferModel] = None,
+                 decode_store: Optional[ProfileStore] = None,
+                 decode_coll: Optional[CollectiveModel] = None):
         self.plan = plan
         self.scheme = plan.scheme
-        self.kv = kv_model or KVTransferModel(coll,
-                                              plan.scheme.transfer_mode)
+        if decode_coll is None:
+            decode_coll = coll if plan.homogeneous else CollectiveModel(
+                plan.decode_cluster, freq_ghz=coll.power.freq_ghz)
+        if decode_store is None:
+            # inherit frequency/grid granularity from the prefill side so
+            # the two pools are costed under one regime
+            decode_store = store if plan.homogeneous else ProfileStore(
+                AnalyticBackend(plan.decode_cluster,
+                                freq_ghz=getattr(store.backend,
+                                                 "freq_ghz", None)),
+                grid_stride=store.grid_stride)
+        if kv_model is None:
+            kv_model = KVTransferModel(
+                coll, plan.scheme.transfer_mode, link=plan.cross_level,
+                endpoint_powers=None if plan.cross_level is None
+                else (coll.power, decode_coll.power))
+        self.kv = kv_model
         if self.kv.mode != plan.scheme.transfer_mode:
             raise ValueError(
                 f"kv_model mode {self.kv.mode!r} != scheme transfer mode "
                 f"{plan.scheme.transfer_mode!r}")
         self.pre_sim = PlanSimulator(plan.prefill_plan, store, coll)
-        self.dec_sim = PlanSimulator(plan.decode_plan, store, coll)
+        self.dec_sim = PlanSimulator(plan.decode_plan, decode_store,
+                                     decode_coll)
 
     # -- helpers --------------------------------------------------------------
 
     def _infeasible(self) -> SimulationReport:
         return SimulationReport(
-            plan_label=self.scheme.label(), e2e_latency=float("inf"),
+            plan_label=self.plan.label(), e2e_latency=float("inf"),
             total_energy=float("inf"), ttft_mean=0, ttft_p95=0,
             tpot_mean=0, tpot_p95=0, latency_p95=0, throughput_tok_s=0,
             mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
@@ -94,9 +128,10 @@ class DisaggSimulator:
             sim._flops_accum = 0.0
             sim._bytes_accum = 0.0
         pre_s, dec_s = self.scheme.prefill, self.scheme.decode
-        hbm = self.plan.cluster.device.hbm_bytes
-        pre_cap = pre_s.kv_token_capacity(hbm)
-        dec_cap = dec_s.kv_token_capacity(hbm)
+        pre_cap = pre_s.kv_token_capacity(
+            self.plan.prefill_cluster.device.hbm_bytes)
+        dec_cap = dec_s.kv_token_capacity(
+            self.plan.decode_cluster.device.hbm_bytes)
         if pre_cap <= 0 or dec_cap <= 0:
             return self._infeasible()
 
@@ -137,6 +172,14 @@ class DisaggSimulator:
             dec_reqs.append(dataclasses.replace(req, arrival=ready))
 
         # ---- decode pool: decode-only continuous batching ----
+        # a preempted request must re-fetch its prompt KV before it can be
+        # re-admitted: full-cache wire time (no prefill left to stream
+        # behind), costed through the same transfer model
+        def refetch_delay(r: Request) -> float:
+            return self.kv.estimate(self.scheme.model, r.context_len,
+                                    pre_s.quant, self.plan.transfer_span,
+                                    lanes=lanes).wire_s
+
         dec_buckets = self._route(dec_reqs, dec_s.model_dp,
                                   lambda r: float(r.gen_len),
                                   drain_rate=512.0)
@@ -146,11 +189,20 @@ class DisaggSimulator:
                 continue
             module = BatchingModule(dec_cap, policy,
                                     model_windows=self.dec_sim.windows,
-                                    is_encdec=is_encdec, role="decode")
+                                    is_encdec=is_encdec, role="decode",
+                                    refetch_delay=refetch_delay)
             dec_results.append(module.run(bucket,
                                           self.dec_sim.iteration_cost))
         dec_records: Dict[int, RequestRecord] = {
             rec.rid: rec for res in dec_results for rec in res.records}
+        # each re-fetch re-serializes the cache on the wire: charge it
+        for rec in dec_records.values():
+            if rec.preemptions:
+                est = self.kv.estimate(self.scheme.model,
+                                       by_rid[rec.rid].context_len,
+                                       pre_s.quant, self.plan.transfer_span,
+                                       lanes=lanes)
+                transfer_energy += rec.preemptions * est.energy_j
 
         # ---- merge per-request records across the two pools ----
         merged: List[RequestRecord] = []
@@ -163,6 +215,7 @@ class DisaggSimulator:
             if dec_rec is not None:
                 rec.finish_time = dec_rec.finish_time
                 rec.preemptions = pre_rec.preemptions + dec_rec.preemptions
+                rec.refetch_s = dec_rec.refetch_s
             else:                      # gen_len == 1: done at prefill
                 rec.finish_time = pre_rec.finish_time
                 rec.preemptions = pre_rec.preemptions
@@ -179,18 +232,22 @@ class DisaggSimulator:
                         + transfer_energy)
         gen_tokens = sum(r.gen_len for r in merged)
 
-        n_dev = self.scheme.total_devices
-        dev = self.plan.cluster.device
-        q = self.pre_sim.q
+        # utilization against each pool's OWN silicon: a H100-prefill/
+        # H200-decode deployment is normalized by the sum of per-pool
+        # peak rates, not one device's numbers
+        pre_dev = self.plan.prefill_cluster.device
+        dec_dev = self.plan.decode_cluster.device
+        n_pre, n_dec = self.scheme.prefill_devices, self.scheme.decode_devices
         flops = self.pre_sim._flops_accum + self.dec_sim._flops_accum
         nbytes = self.pre_sim._bytes_accum + self.dec_sim._bytes_accum
-        peak = dev.flops(q.compute_dtype)
-        mfu = flops / (total_time * n_dev * peak) if total_time > 0 else 0.0
-        mbu = (nbytes / (total_time * n_dev * dev.hbm_bw)
-               if total_time > 0 else 0.0)
+        peak = (n_pre * pre_dev.flops(self.pre_sim.q.compute_dtype)
+                + n_dec * dec_dev.flops(self.dec_sim.q.compute_dtype))
+        bw = n_pre * pre_dev.hbm_bw + n_dec * dec_dev.hbm_bw
+        mfu = flops / (total_time * peak) if total_time > 0 else 0.0
+        mbu = nbytes / (total_time * bw) if total_time > 0 else 0.0
 
         return SimulationReport(
-            plan_label=self.scheme.label(),
+            plan_label=self.plan.label(),
             e2e_latency=total_time,
             total_energy=total_energy,
             ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,

@@ -1,0 +1,150 @@
+"""Regression tests for three Batching Module correctness fixes.
+
+1. Decode-role preemption used to re-materialize the victim's shipped
+   prompt KV for free; re-admission now waits out a re-fetch delay.
+2. ``peak_kv_tokens`` was never sampled inside fast-forwarded decode runs
+   (and exact stepping sampled only AFTER completions released their KV),
+   understating the reported peak.
+3. ``_run_static`` crashed (``max()`` of an empty batch) when the head
+   request's prompt alone exceeded KV capacity, and stamped ``gen_len==1``
+   finishes at batch-drain instead of prefill end.
+
+Hypothesis-free on purpose: these must run on the minimal dev install.
+"""
+
+import math
+
+import pytest
+
+from repro.core.batching import BatchingModule, BatchingPolicy
+from repro.core.trace import Request
+
+
+def const_cost(per_token=1e-3, per_iter=5e-3):
+    def step_cost(w):
+        t = per_iter + per_token * w.total_tokens
+        return t, t * 100.0
+    return step_cost
+
+
+def mk_requests(specs):
+    return [Request(rid=i, arrival=a, context_len=c, gen_len=g)
+            for i, (a, c, g) in enumerate(specs)]
+
+
+def _tpot_p95(res):
+    ts = sorted((r.finish_time - r.first_token_time) / (r.gen_len - 1)
+                for r in res.records if r.gen_len > 1)
+    return ts[min(len(ts) - 1, int(math.ceil(0.95 * len(ts))) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# 1. decode-pool preemption re-fetch is charged
+# ---------------------------------------------------------------------------
+
+def test_decode_refetch_charged_raises_tpot_p95():
+    """A KV-constrained decode pool must pay for preemption re-fetches:
+    TPOT p95 is strictly higher than the (buggy) free-re-fetch baseline."""
+    # both admitted (2*201 + headroom = capacity), so decode growth
+    # overflows immediately and preempts the most recent request; the
+    # short request then drains the pool while the victim re-fetches
+    reqs = mk_requests([(0.0, 200, 5), (0.0, 200, 60)])
+    free = BatchingModule(404, BatchingPolicy(), role="decode",
+                          refetch_delay=lambda r: 0.0).run(
+        reqs, const_cost())
+    paid = BatchingModule(404, BatchingPolicy(), role="decode").run(
+        reqs, const_cost())
+    assert free.preemptions > 0 and paid.preemptions > 0
+    assert paid.kv_refetch_s > 0.0
+    assert free.kv_refetch_s == 0.0
+    assert _tpot_p95(paid) > _tpot_p95(free)
+    # the charge is recorded on the victim, not spread over all requests
+    victim = next(r for r in paid.records if r.preemptions > 0)
+    assert victim.refetch_s == pytest.approx(paid.kv_refetch_s)
+
+
+def test_decode_refetch_callback_is_authoritative():
+    reqs = mk_requests([(0.0, 200, 5), (0.0, 200, 60)])
+    res = BatchingModule(404, BatchingPolicy(), role="decode",
+                         refetch_delay=lambda r: 0.25).run(
+        reqs, const_cost())
+    assert res.preemptions > 0
+    assert res.kv_refetch_s == pytest.approx(0.25 * res.preemptions)
+
+
+def test_decode_refetch_keeps_first_token_time():
+    """Re-admission after preemption must NOT re-stamp the first token:
+    it was already emitted before the victim was evicted."""
+    reqs = mk_requests([(0.0, 200, 5), (0.0, 200, 60)])
+    res = BatchingModule(404, BatchingPolicy(), role="decode").run(
+        reqs, const_cost())
+    victim = next(r for r in res.records if r.preemptions > 0)
+    assert victim.first_token_time == 0.0  # admitted at t=0, never re-set
+
+
+def test_colocated_preemption_unchanged():
+    """role="both" already pays for preemption via prompt recompute; no
+    re-fetch delay is charged there."""
+    reqs = mk_requests([(0.0, 40, 60), (0.0, 40, 60), (0.0, 40, 60)])
+    res = BatchingModule(102, BatchingPolicy()).run(reqs, const_cost())
+    assert res.preemptions > 0
+    assert res.kv_refetch_s == 0.0
+    assert all(r.refetch_s == 0.0 for r in res.records)
+
+
+# ---------------------------------------------------------------------------
+# 2. fast-forward peak KV sampling
+# ---------------------------------------------------------------------------
+
+def test_fast_forward_peak_kv_matches_exact():
+    """peak_kv_tokens must be sampled inside fast-forwarded decode runs:
+    fast and exact stepping agree exactly on the peak."""
+    reqs = mk_requests([(0.0, 20, 40), (0.5, 10, 80), (3.0, 30, 25)])
+    fast = BatchingModule(10000, BatchingPolicy(fast_forward=True)).run(
+        reqs, const_cost())
+    slow = BatchingModule(10000, BatchingPolicy(fast_forward=False)).run(
+        reqs, const_cost())
+    assert fast.peak_kv_tokens == slow.peak_kv_tokens
+    # the peak includes every request's final generated token (sampled
+    # before completions release their KV): the single long-lived request
+    # alone ends at 10 + 80 = 90 resident tokens
+    assert slow.peak_kv_tokens >= 90
+
+
+def test_fast_forward_peak_kv_decode_role():
+    reqs = mk_requests([(0.0, 64, 50) for _ in range(4)])
+    fast = BatchingModule(10000, BatchingPolicy(fast_forward=True),
+                          role="decode").run(reqs, const_cost())
+    slow = BatchingModule(10000, BatchingPolicy(fast_forward=False),
+                          role="decode").run(reqs, const_cost())
+    assert fast.peak_kv_tokens == slow.peak_kv_tokens
+    assert fast.peak_kv_tokens == 4 * (64 + 50)   # analytic: all max out
+
+
+# ---------------------------------------------------------------------------
+# 3. static batching: oversized head prompt + gen_len==1 finish
+# ---------------------------------------------------------------------------
+
+def test_static_over_capacity_prompt_terminates():
+    """A head prompt larger than KV capacity used to crash _run_static
+    (max() of an empty batch); it must run solo and finish."""
+    reqs = mk_requests([(0.0, 500, 3), (0.0, 10, 2)])
+    res = BatchingModule(100, BatchingPolicy(
+        mode="static", max_batch_size=4)).run(reqs, const_cost())
+    assert len(res.records) == 2
+    for r in res.records:
+        assert r.finish_time >= r.first_token_time > 0.0
+    # the oversized prompt really was admitted (solo) and overshot
+    assert res.peak_kv_tokens >= 500
+
+
+def test_static_gen1_finishes_at_prefill_end():
+    reqs = mk_requests([(0.0, 10, 1), (0.0, 10, 40)])
+    res = BatchingModule(10000, BatchingPolicy(
+        mode="static", max_batch_size=4)).run(reqs, const_cost())
+    short = next(r for r in res.records if r.gen_len == 1)
+    long = next(r for r in res.records if r.gen_len == 40)
+    # one shared prefill iteration, then the gen1 request is done; it must
+    # not wait for the whole batch to drain
+    assert short.finish_time == pytest.approx(short.first_token_time)
+    assert short.finish_time < long.finish_time

@@ -6,20 +6,23 @@ decayed-backlog router fix, the SearchResult objective fix, and an
 end-to-end coupled two-pool simulation smoke test.
 """
 
+import dataclasses
 import math
 
 import pytest
 
 from repro.core import (ApexSearch, BatchingModule, BatchingPolicy,
-                        CollectiveModel, get_format, get_trace,
-                        h100_multinode, h100_node, ir_from_hf_config,
-                        synthesize_trace, trace_stats)
+                        CollectiveModel, NetworkLevel, cross_pool_link,
+                        get_format, get_trace, h100_multinode, h100_node,
+                        h200_node, ir_from_hf_config, synthesize_trace,
+                        trace_stats, tpu_v5e_pod)
+from repro.core.profiles import AnalyticBackend, ProfileStore
 from repro.core.search import OBJECTIVES, SearchResult
 from repro.core.simulator import SimulationReport
 from repro.core.trace import TRACE_SPECS, Request
 from repro.disagg import (DisaggScheme, DisaggSimulator, KVTransferModel,
                           cross_pool_span, generate_disagg_schemes,
-                          map_disagg_scheme)
+                          is_mixed_label, map_disagg_scheme)
 from repro.serving.router import BacklogBalancer
 
 SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
@@ -265,6 +268,255 @@ def test_blocking_transfer_delays_decode():
     assert bl.feasible and lw.feasible
     assert bl.e2e_latency >= lw.e2e_latency - 1e-9
     assert bl.tpot_p95 >= lw.tpot_p95 - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous pools
+# ---------------------------------------------------------------------------
+
+def test_cross_pool_link_picks_min_bandwidth():
+    h100, tpu = h100_node(4), tpu_v5e_pod(chips=16, ring_group=16)
+    link = cross_pool_link(h100, tpu)
+    # joint wire is paced by the slower injector (ICI 50 GB/s vs NVLink 450)
+    assert link.bw_per_device == pytest.approx(50e9)
+    assert link.latency_s == pytest.approx(
+        max(h100.levels[-1].latency_s, tpu.levels[-1].latency_s))
+    assert link.launch_s == pytest.approx(
+        max(h100.levels[-1].launch_s, tpu.levels[-1].launch_s))
+    assert link.group_size == 4 + 16
+    # symmetric in the min/max aggregates
+    rev = cross_pool_link(tpu, h100)
+    assert rev.bw_per_device == link.bw_per_device
+    assert rev.latency_s == link.latency_s
+
+
+def test_is_mixed_label_classification():
+    assert not is_mixed_label("disagg[2P:x | 2D:y]@layerwise")
+    assert not is_mixed_label("DP4xPP1x[...]@fp16")
+    assert not is_mixed_label("disagg[...]@layerwise#H200-SXM>H200-SXM")
+    assert is_mixed_label("disagg[...]@layerwise#H100-SXM>H200-SXM")
+    # stays consistent with what DisaggPlan.label() actually emits
+    model = small_model()
+    scheme = _hetero_scheme(model, h100_node(2), h200_node(2))
+    plan = map_disagg_scheme(scheme, prefill_cluster=h100_node(2),
+                             decode_cluster=h200_node(2))
+    assert is_mixed_label(plan.label())
+    same = map_disagg_scheme(scheme, prefill_cluster=h100_node(2),
+                             decode_cluster=h100_node(2))
+    assert not is_mixed_label(same.label())
+
+
+def test_hetero_prefilter_uses_per_pool_hbm():
+    """A model too big for a 2xH100 pool but fitting a 2xH200 pool must
+    only be admitted on the H200 side."""
+    big = ir_from_hf_config(
+        dict(hidden_size=8192, num_hidden_layers=96,
+             num_attention_heads=64, num_key_value_heads=8,
+             intermediate_size=28672, vocab_size=128256), name="mid")
+    per_dev_2 = None
+    from repro.core import generate_schemes
+    cands = [s for s in generate_schemes(big, 2, quant="fp16")
+             if s.is_feasible_for_current_systems()]
+    per_dev_2 = min(s.weight_bytes_per_device() for s in cands)
+    # sanity: the scenario really straddles the two HBM sizes
+    assert 80e9 * 0.92 < per_dev_2 < 141e9 * 0.92
+
+    from repro.disagg import generate_disagg_schemes
+    h100_fit = generate_disagg_schemes(
+        big, prefill_cluster=h100_node(2), decode_cluster=h100_node(2),
+        max_plans=100000)
+    mixed = generate_disagg_schemes(
+        big, prefill_cluster=h100_node(2), decode_cluster=h200_node(2),
+        max_plans=100000)
+    assert not h100_fit          # neither pool can hold the weights
+    assert not mixed             # the H100 prefill pool still can't
+    h200_both = generate_disagg_schemes(
+        big, prefill_cluster=h200_node(2), decode_cluster=h200_node(2),
+        max_plans=100000)
+    assert h200_both             # per-pool HBM admits the H200 pools
+
+
+def _hetero_scheme(model, pre_c, dec_c):
+    schemes = generate_disagg_schemes(
+        model, prefill_cluster=pre_c, decode_cluster=dec_c,
+        max_plans=100000)
+    return next(s for s in schemes
+                if s.prefill.model_dp == 1 and s.decode.model_dp == 1
+                and s.prefill.pp_stages == 1 and s.decode.pp_stages == 1)
+
+
+def test_hetero_plan_simulates_end_to_end():
+    model = small_model()
+    pre_c, dec_c = h100_node(4), h200_node(4)
+    scheme = _hetero_scheme(model, pre_c, dec_c)
+    plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
+                             decode_cluster=dec_c)
+    assert not plan.homogeneous
+    assert plan.cross_level is not None
+    assert "#H100-SXM>H200-SXM" in plan.label()
+    store = ProfileStore(AnalyticBackend(pre_c))
+    sim = DisaggSimulator(plan, store, CollectiveModel(pre_c))
+    reqs = get_trace("chat", arrival_rate=4.0, seed=3, num_requests=40)
+    rep = sim.simulate(reqs, keep_records=True)
+    assert rep.feasible
+    assert rep.plan_label == plan.label()
+    assert len(rep.records) == len(reqs)
+    for rec in rep.records:
+        assert rec.finish_time >= rec.first_token_time >= rec.arrival
+    # decode pool sized by the H200's HBM, not the H100's
+    assert scheme.decode.kv_token_capacity(141e9) \
+        > scheme.decode.kv_token_capacity(80e9)
+
+
+def test_hetero_degenerate_matches_homogeneous():
+    """Identical pool devices through the per-pool-cluster plumbing must
+    reproduce the shared-cluster (PR-1) path exactly: same labels, same
+    objective values, bit for bit."""
+    model = small_model()
+    cluster = h100_node(8)
+    schemes = generate_disagg_schemes(model, cluster, max_plans=100000)
+    scheme = next(s for s in schemes
+                  if s.prefill_devices == 4 and s.decode_devices == 4
+                  and s.prefill.model_dp == 1 and s.decode.model_dp == 1
+                  and s.prefill.pp_stages == 1 and s.decode.pp_stages == 1)
+    reqs = get_trace("chat", arrival_rate=4.0, seed=3, num_requests=40)
+
+    search = ApexSearch(model, cluster)
+    homo = DisaggSimulator(map_disagg_scheme(scheme, cluster),
+                           search.store, search.coll).simulate(reqs)
+
+    pre_c, dec_c = h100_node(4), h100_node(4)
+    plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
+                             decode_cluster=dec_c)
+    het = DisaggSimulator(plan, ProfileStore(AnalyticBackend(pre_c)),
+                          CollectiveModel(pre_c)).simulate(reqs)
+
+    # island pairs are suffixed with their pool devices (they are NOT the
+    # same deployment as a shared-cluster split); everything else matches
+    assert het.plan_label == homo.plan_label + "#H100-SXM>H100-SXM"
+    for field in ("e2e_latency", "total_energy", "ttft_mean", "ttft_p95",
+                  "tpot_mean", "tpot_p95", "latency_p95",
+                  "throughput_tok_s", "mfu", "mbu", "iterations",
+                  "preemptions", "peak_kv_tokens", "peak_batch"):
+        assert getattr(het, field) == getattr(homo, field), field
+
+
+def test_hetero_blocking_no_faster_than_layerwise():
+    model = small_model()
+    pre_c, dec_c = h100_node(4), h200_node(4)
+    base = _hetero_scheme(model, pre_c, dec_c)
+    blocking = dataclasses.replace(base, transfer_mode="blocking")
+    reqs = get_trace("summarization", arrival_rate=2.0, seed=1,
+                     num_requests=24)
+
+    def run(s):
+        plan = map_disagg_scheme(s, prefill_cluster=pre_c,
+                                 decode_cluster=dec_c)
+        sim = DisaggSimulator(plan, ProfileStore(AnalyticBackend(pre_c)),
+                              CollectiveModel(pre_c))
+        return sim.simulate(reqs)
+
+    lw, bl = run(base), run(blocking)
+    assert bl.feasible and lw.feasible
+    assert bl.e2e_latency >= lw.e2e_latency - 1e-9
+
+
+def test_search_pool_menu_ranks_hetero_plans():
+    """A heterogeneous DisaggPlan must appear (and rank) in
+    ApexSearch.search(disaggregated=True) alongside colocated and
+    homogeneous-disagg candidates."""
+    model = small_model()
+    search = ApexSearch(model, h100_node(4))
+    reqs = get_trace("chat", arrival_rate=4.0, seed=0, num_requests=24)
+    res = search.search(reqs, objective="ttft", feasible_only=True,
+                        disaggregated=True, max_disagg_plans=64,
+                        pool_menu=[h100_node(2), h200_node(2)])
+    labels = [r.plan_label for r in res.all_reports]
+    assert any("#H100-SXM>H200-SXM" in l for l in labels)
+    assert any("#H200-SXM>H100-SXM" in l for l in labels)
+    assert any(l.startswith("disagg[") and "#" not in l for l in labels)
+    assert any(not l.startswith("disagg[") for l in labels)
+    feas = [r for r in res.all_reports if r.feasible]
+    assert res.best.ttft_p95 == min(r.ttft_p95 for r in feas)
+    # menu pairs over the device budget are never enumerated: every
+    # hetero candidate fits 2 + 2 = 4 devices
+    for l in labels:
+        if "#" in l:
+            assert "2P:" in l and "2D:" in l
+
+
+class _FreeRefetchKV:
+    """Wraps a KVTransferModel zeroing the full-cache wire time the
+    re-fetch path charges (delay_s — the admission handoff — is kept), to
+    reconstruct the pre-fix free-re-fetch behavior as a baseline."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.mode = inner.mode
+
+    def kv_bytes(self, *a, **k):
+        return self.inner.kv_bytes(*a, **k)
+
+    def estimate(self, *a, **k):
+        return dataclasses.replace(self.inner.estimate(*a, **k),
+                                   wire_s=0.0)
+
+
+def test_coupled_refetch_raises_tpot_in_kv_constrained_pool():
+    """Acceptance: with preemption re-fetch charged, a KV-constrained
+    decode pool shows strictly higher TPOT p95 than the free-re-fetch
+    baseline — in the coupled two-pool simulation, not just the module.
+
+    Scenario built for determinism: two requests exactly fill the decode
+    pool, decode growth evicts the younger one, the short request drains
+    the pool, and the victim's re-admission is gated only by the re-fetch
+    over a deliberately slow cross-pool link.
+    """
+    model = small_model()
+    pre_c = h100_node(2)
+    schemes = generate_disagg_schemes(
+        model, prefill_cluster=pre_c, decode_cluster=h100_node(2),
+        max_plans=100000)
+    scheme = next(s for s in schemes
+                  if s.prefill.model_dp == 1 and s.decode.model_dp == 1
+                  and s.prefill.pp_stages == 1 and s.decode.pp_stages == 1)
+    # decode-pool HBM sized so capacity == both prompts + admission
+    # headroom: the first decode iterations overflow it
+    ctx = 600
+    cap_target = 2 * (ctx + 1) + 2
+    per_tok = scheme.decode.kv_bytes_per_token_per_device()
+    need = (scheme.decode.weight_bytes_per_device()
+            + scheme.decode.state_bytes_per_seq_per_device() * 512
+            + cap_target * per_tok)
+    small_dev = dataclasses.replace(h100_node(2).device, name="H100-tiny",
+                                    hbm_bytes=need / 0.85)
+    dec_c = dataclasses.replace(h100_node(2), device=small_dev,
+                                name="h100tiny x2")
+    assert abs(scheme.decode.kv_token_capacity(dec_c.device.hbm_bytes)
+               - cap_target) <= 1
+
+    slow_wan = NetworkLevel("wan", 4, 1e9, 1e-4, launch_s=5e-5)
+    plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
+                             decode_cluster=dec_c, cross_level=slow_wan)
+    # gen 50 amortizes the short request's handoff delay so the VICTIM'S
+    # TPOT is the p95 in both runs
+    reqs = [Request(rid=0, arrival=0.0, context_len=ctx, gen_len=50),
+            Request(rid=1, arrival=0.0, context_len=ctx, gen_len=400)]
+
+    def run(free: bool):
+        sim = DisaggSimulator(plan, ProfileStore(AnalyticBackend(pre_c)),
+                              CollectiveModel(pre_c))
+        if free:
+            sim.kv = _FreeRefetchKV(sim.kv)
+        return sim.simulate(reqs, keep_records=True)
+
+    paid, free = run(False), run(True)
+    assert paid.feasible and free.feasible
+    assert paid.preemptions > 0 and free.preemptions > 0
+    victim = next(r for r in paid.records if r.preemptions > 0)
+    assert victim.refetch_s > 0.0      # the merge carries the charge
+    assert paid.tpot_p95 > free.tpot_p95
+    assert paid.e2e_latency > free.e2e_latency
 
 
 def test_joint_search_ranks_both_families():

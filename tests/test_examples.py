@@ -1,0 +1,67 @@
+"""Import-rot guard for examples/ (and the benchmark registry).
+
+Examples are executable scripts, so importing them outright would RUN
+them.  Instead we parse each file and resolve its module-level imports:
+every ``import x`` / ``from x import y`` must point at something that
+exists.  This is what CI's example check runs — a renamed symbol in
+repro.core breaks here instead of silently rotting the examples.
+
+Third-party optional dependencies (jax on a simulator-only install) skip
+rather than fail; anything rooted in ``repro`` must resolve.
+"""
+
+import ast
+import importlib
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((ROOT / "examples").glob("*.py"))
+BENCHMARKS = sorted(p for p in (ROOT / "benchmarks").glob("*.py")
+                    if p.name != "common.py")
+
+
+def _import_or_skip(module: str):
+    try:
+        return importlib.import_module(module)
+    except ModuleNotFoundError as e:
+        if e.name and not e.name.split(".")[0] == "repro":
+            pytest.skip(f"optional dependency {e.name!r} unavailable")
+        raise
+
+
+def _check_module_imports(path: pathlib.Path):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in tree.body:           # module level only: lazy imports are
+        # allowed to be conditional
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                _import_or_skip(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:           # package-relative (benchmarks/common)
+                continue
+            mod = _import_or_skip(node.module)
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if not hasattr(mod, alias.name):
+                    # "from pkg import submodule" form
+                    _import_or_skip(f"{node.module}.{alias.name}")
+
+
+def test_examples_exist():
+    # outside the parametrization: an empty EXAMPLES list would otherwise
+    # collect zero tests and pass green on exactly the rot we guard
+    assert EXAMPLES, "examples/ directory went missing"
+    assert BENCHMARKS, "benchmarks/ directory went missing"
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_imports_resolve(path):
+    _check_module_imports(path)
+
+
+@pytest.mark.parametrize("path", BENCHMARKS, ids=lambda p: p.name)
+def test_benchmark_imports_resolve(path):
+    _check_module_imports(path)
