@@ -1,0 +1,83 @@
+"""Plan-evaluation throughput benchmark for the simulation core.
+
+Times how many candidate plans per second ``ApexSearch.search`` evaluates
+(fixed seed, fixed trace slices) for a colocated-only search and a joint
+colocated+disaggregated search, and writes ``BENCH_core.json`` next to the
+repo root so successive PRs can track the perf trajectory of the engine
+(step-cost memoization vs event-loop overhead).
+
+    PYTHONPATH=src python benchmarks/bench_core.py [--smoke] [--out PATH]
+
+``--smoke`` shrinks the workload to a few seconds for CI import-rot +
+sanity checking; the default sizing is the comparable number to quote.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core import ApexSearch, get_trace, h100_node, ir_from_hf_config
+
+MODEL_CFG = dict(hidden_size=2048, num_hidden_layers=16,
+                 num_attention_heads=16, num_key_value_heads=8,
+                 intermediate_size=8192, vocab_size=32000)
+
+
+def bench_search(search, reqs, **kw):
+    t0 = time.perf_counter()
+    res = search.search(reqs, **kw)
+    dt = time.perf_counter() - t0
+    return {
+        "plans": res.num_schemes,
+        "feasible": res.num_feasible,
+        "seconds": round(dt, 3),
+        "plans_per_sec": round(res.num_schemes / dt, 2),
+        "best": res.best.plan_label,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizing for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+
+    n_req = 16 if args.smoke else 64
+    max_disagg = 12 if args.smoke else 48
+    model = ir_from_hf_config(MODEL_CFG, name="tiny-7b")
+    cluster = h100_node(8)
+    search = ApexSearch(model, cluster)
+    reqs = get_trace("chat", arrival_rate=4.0, seed=0, num_requests=n_req)
+
+    results = {
+        "colocated": bench_search(search, reqs, feasible_only=True),
+        "joint_disagg": bench_search(
+            search, reqs, feasible_only=True, disaggregated=True,
+            max_disagg_plans=max_disagg),
+    }
+    out = {
+        "bench": "bench_core",
+        "smoke": args.smoke,
+        "n_requests": n_req,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "results": results,
+    }
+    path = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_core.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    for name, r in results.items():
+        print(f"{name}: {r['plans']} plans in {r['seconds']}s "
+              f"-> {r['plans_per_sec']} plans/s (best {r['best']})")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

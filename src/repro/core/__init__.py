@@ -2,6 +2,9 @@
 planning for LLM serving via dynamism-aware simulation."""
 
 from .batching import BatchingModule, BatchingPolicy, BatchingResult
+from .engine import (ContinuousScheduler, Engine, SchedulerPolicy,
+                     SharedLink, StaticScheduler, StepCostCache)
+from .metrics import percentile
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
                       cpu_local, cross_pool_link, get_cluster,
                       h100_multinode, h100_node, h200_node,
@@ -26,14 +29,16 @@ __all__ = [
     "ApexSearch", "AnalyticBackend", "AttentionCell", "BatchingModule",
     "BatchingPolicy", "BatchingResult", "Block", "Cell", "CellScheme",
     "CLUSTER_PRESETS", "Cluster", "CollectiveCall", "CollectiveModel",
-    "CrossAttentionCell", "DeviceSpec", "ExecutionPlan", "FORMATS",
+    "ContinuousScheduler", "CrossAttentionCell", "DeviceSpec", "Engine",
+    "ExecutionPlan", "FORMATS",
     "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
     "NetworkLevel", "OpCall", "cpu_local",
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
-    "QuantFormat", "Request", "SSMCell", "SearchResult", "SimulationReport",
+    "QuantFormat", "Request", "SSMCell", "SchedulerPolicy", "SearchResult",
+    "SharedLink", "SimulationReport", "StaticScheduler", "StepCostCache",
     "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
     "cross_pool_link", "divisors", "generate_schemes", "get_cluster",
-    "get_format", "get_trace",
+    "get_format", "get_trace", "percentile",
     "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
     "ir_from_hf_config", "map_scheme", "prefilter_schemes",
     "register_format",

@@ -22,12 +22,20 @@ uneventful decode iterations (no arrival/completion/overflow possible
 within the run) into one cost evaluation at the midpoint KV state; this is
 exact to first order (decode cost is ~linear in KV length) and is validated
 against exact stepping in tests/test_batching.py.
+
+Since the event-engine refactor this module is a one-replica front for
+``core/engine.py``: the continuous/chunked/static/decode-role mechanics
+live in the engine's ``SchedulerPolicy`` variants (``ContinuousScheduler``
+/ ``StaticScheduler``), where every replica of every pool — colocated or
+disaggregated — shares them.  ``BatchingModule.run`` simply drives a
+single-replica, single-pool engine, which is numerically identical to the
+per-replica loop it replaced (tests/test_engine_golden.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .ir import Workload
 from .trace import Request
@@ -43,40 +51,6 @@ class BatchingPolicy:
     max_prefill_tokens: int = 16384        # per-iteration prefill budget
     fast_forward: bool = True
     fast_forward_cap: int = 64
-
-
-@dataclasses.dataclass
-class _Active:
-    req: Request
-    admitted_at: float
-    order: int                    # admission order (for preemption LIFO)
-    prefill_done: int = 0         # prompt tokens already processed
-    generated: int = 0            # output tokens produced
-    first_token_time: Optional[float] = None
-
-    @property
-    def kv_tokens(self) -> int:
-        return self.prefill_done + self.generated
-
-    @property
-    def kv_reserved(self) -> int:
-        """Admission-time reservation: an admitted request's prompt KV is
-        committed even before its prefill runs (prevents admission storms
-        that thrash prefill/evict cycles and starve decodes)."""
-        return max(self.req.context_len, self.kv_tokens)
-
-    @property
-    def prefill_remaining(self) -> int:
-        return self.req.context_len - self.prefill_done
-
-    @property
-    def done(self) -> bool:
-        return self.generated >= self.req.gen_len
-
-    def reset(self) -> None:
-        self.prefill_done = 0
-        self.generated = 0
-        self.first_token_time = None
 
 
 @dataclasses.dataclass
@@ -138,339 +112,34 @@ class BatchingModule:
         self.windows = tuple(model_windows)
         self.max_sequences = max_sequences
         self.is_encdec = is_encdec
-        # role="decode" models the decode pool of a disaggregated deployment
-        # (disagg/simulate.py): an admitted request's prompt KV is already
+        # role="decode" models the decode pool of a disaggregated
+        # deployment: an admitted request's prompt KV is already
         # materialized (shipped from the prefill pool), so admission starts
         # it mid-lifecycle — prefill done, first token produced — and only
         # decode iterations run here.  A preempted request loses its cache
         # and must RE-FETCH it before re-admission: ``refetch_delay(req)``
         # returns the seconds the victim waits before it becomes admissible
-        # again.  The coupled simulation passes the KV-transfer model's
-        # full-cache wire time (a re-fetch cannot stream behind a prefill
-        # that already happened); standalone use defaults to a re-prefill
-        # estimate priced through ``step_cost`` on the victim's prompt.
+        # again.  The coupled simulation routes the re-fetch through the
+        # event engine as a real re-prefill + transfer; standalone use
+        # defaults to a re-prefill estimate priced through ``step_cost``.
         self.role = role
         self.refetch_delay = refetch_delay
-        self._refetch_cache: Dict[int, float] = {}
-
-    # -- public entry ---------------------------------------------------------
 
     def run(self, requests: Sequence[Request], step_cost: StepCost
             ) -> BatchingResult:
-        if self.policy.mode == "static":
-            if self.role == "decode":
-                raise ValueError("decode role requires continuous batching")
-            return self._run_static(requests, step_cost)
-        return self._run_continuous(requests, step_cost)
-
-    # -- continuous (iteration-level) batching --------------------------------
-
-    def _run_continuous(self, requests: Sequence[Request],
-                        step_cost: StepCost) -> BatchingResult:
-        self._refetch_cache.clear()
-        pending: List[Request] = sorted(requests, key=lambda r: r.arrival)
-        active: List[_Active] = []
-        records: Dict[int, RequestRecord] = {
-            r.rid: RequestRecord(r.rid, r.arrival, r.context_len, r.gen_len)
-            for r in requests}
-        now = 0.0
-        order = 0
-        iters = 0
-        energy = 0.0
-        preemptions = 0
-        peak_kv = 0
-        peak_batch = 0
-        kv_refetch_s = 0.0
-        new_admissions: List[_Active] = []
-
-        def kv_used() -> int:
-            return sum(a.kv_tokens for a in active)
-
-        def kv_reserved() -> int:
-            return sum(a.kv_reserved for a in active)
-
-        while pending or active:
-            # ---- admission (greedy, memory-gated; paper §3.3) ----
-            # headroom of one decode token per active sequence prevents the
-            # admit -> prefill -> immediately-evict livelock
-            while pending and pending[0].arrival <= now:
-                headroom = len(active) + 1
-                cap_ok = (kv_reserved() + pending[0].context_len
-                          + headroom <= self.capacity)
-                # liveness: an idle engine always admits its head request,
-                # even one whose prompt alone exceeds KV capacity (it runs
-                # solo and may overshoot — dual of never-evict-last)
-                if not active:
-                    cap_ok = True
-                seq_ok = len(active) < self.max_sequences
-                bs_ok = (self.policy.max_batch_size is None
-                         or len(active) < self.policy.max_batch_size)
-                if not (cap_ok and seq_ok and bs_ok):
-                    break
-                req = pending.pop(0)
-                a = _Active(req=req, admitted_at=now, order=order)
-                order += 1
-                if self.role == "decode":
-                    # prompt KV arrived from the prefill pool; the first
-                    # token was already emitted there.  Standalone records
-                    # stamp first-token at FIRST admission only (a re-fetch
-                    # after preemption does not re-emit the first token); a
-                    # coupled simulation (disagg/simulate.py) overwrites it
-                    # with the prefill pool's timestamp.
-                    a.prefill_done = req.context_len
-                    a.generated = 1
-                    a.first_token_time = now
-                    if records[req.rid].preemptions == 0:
-                        records[req.rid].first_token_time = now
-                    if a.done:          # gen_len <= 1: nothing to decode
-                        records[req.rid].finish_time = now
-                        continue
-                active.append(a)
-                new_admissions.append(a)
-
-            if not active:
-                if not pending:
-                    break
-                now = max(now, pending[0].arrival)
-                continue
-
-            # ---- build this iteration's batch ----
-            prefills = [a for a in active if a.prefill_remaining > 0]
-            decodes = [a for a in active if a.prefill_remaining == 0
-                       and not a.done]
-            chunk = self.policy.chunked_prefill
-            iter_prefills: List[Tuple[_Active, int]] = []
-            budget = self.policy.max_prefill_tokens
-            for a in prefills:
-                if budget <= 0:
-                    break
-                take = min(a.prefill_remaining, budget)
-                if chunk is not None:
-                    take = min(take, chunk)
-                iter_prefills.append((a, take))
-                budget -= take
-                if chunk is None and budget <= 0:
-                    break
-            # contiguous batching: prefill iterations exclude decodes;
-            # chunked prefill mixes them (Sarathi-style).
-            iter_decodes = decodes if (chunk is not None or not iter_prefills) \
-                else []
-
-            w = self._workload(iter_prefills, iter_decodes, new_admissions)
-            new_admissions = []
-            dur, en = step_cost(w)
-            now += dur
-            energy += en
-            iters += 1
-            peak_batch = max(peak_batch, len(iter_prefills) + len(iter_decodes))
-
-            # ---- apply iteration effects ----
-            for a, take in iter_prefills:
-                a.prefill_done += take
-                if a.prefill_remaining == 0:
-                    # prompt fully processed -> first token emitted
-                    a.generated = 1
-                    a.first_token_time = now
-                    records[a.req.rid].first_token_time = now
-                    if a.done:
-                        records[a.req.rid].finish_time = now
-            for a in iter_decodes:
-                a.generated += 1
-            # sample peak BEFORE completions release their KV: the true
-            # peak includes each finishing request's final token
-            peak_kv = max(peak_kv, kv_used())
-
-            finished = [a for a in active if a.done]
-            for a in finished:
-                records[a.req.rid].finish_time = now
-            active = [a for a in active if not a.done]
-
-            # ---- fast-forward uneventful decode runs ----
-            if (self.policy.fast_forward and not iter_prefills and active
-                    and all(a.prefill_remaining == 0 for a in active)):
-                steps = self._ff_steps(active, pending, now, dur)
-                if steps > 1:
-                    kv_lens = [a.kv_tokens for a in active]
-                    mid = [k + steps // 2 for k in kv_lens]
-                    w_mid = self._workload_decode(mid, len(active))
-                    d_mid, e_mid = step_cost(w_mid)
-                    for a in active:
-                        a.generated += steps
-                    # per-token times: uniform at d_mid
-                    now += d_mid * steps
-                    energy += e_mid * steps
-                    iters += steps
-                    # peak inside the run = KV total at the END of the run
-                    # (no arrival/completion/overflow can occur within it),
-                    # just before completions are removed
-                    peak_kv = max(peak_kv,
-                                  sum(kv_lens) + steps * len(active))
-                    finished = [a for a in active if a.done]
-                    for a in finished:
-                        over = a.generated - a.req.gen_len
-                        records[a.req.rid].finish_time = now - d_mid * over
-                        a.generated = a.req.gen_len
-                    active = [a for a in active if not a.done]
-
-            # ---- KV overflow -> preempt most-recent (paper §3.3) ----
-            # never evict the LAST active request: a single sequence whose
-            # prompt+generation exceeds capacity must run to completion
-            # (evicting it would requeue-loop forever); real engines
-            # likewise always keep at least one sequence scheduled.
-            while kv_used() > self.capacity and len(active) > 1:
-                victim = max(active, key=lambda a: a.order)
-                active.remove(victim)
-                victim.reset()
-                records[victim.req.rid].preemptions += 1
-                preemptions += 1
-                if self.role == "decode":
-                    # the shipped prompt KV was dropped; the victim only
-                    # becomes admissible again after re-fetching it
-                    delay = self._refetch(victim.req, step_cost)
-                    records[victim.req.rid].refetch_s += delay
-                    kv_refetch_s += delay
-                    ready = now + delay
-                    re_req = dataclasses.replace(victim.req, arrival=ready)
-                    idx = 0
-                    while (idx < len(pending)
-                           and pending[idx].arrival <= ready):
-                        idx += 1
-                    pending.insert(idx, re_req)
-                else:
-                    pending.insert(0, victim.req)
-            peak_kv = max(peak_kv, kv_used())
-
-        return BatchingResult(records=list(records.values()),
-                              iterations=iters, total_time=now,
-                              total_energy=energy, preemptions=preemptions,
-                              peak_kv_tokens=peak_kv, peak_batch=peak_batch,
-                              kv_refetch_s=kv_refetch_s)
-
-    def _refetch(self, req: Request, step_cost: StepCost) -> float:
-        """Seconds a preempted decode-role request waits for its prompt KV.
-
-        With a ``refetch_delay`` callback (the coupled disagg simulation
-        wires in the KV-transfer model), that is authoritative.  Standalone,
-        the cache must be re-materialized by a re-prefill, priced through
-        the same ``step_cost`` callback as every other iteration (time only
-        — the recompute runs on the prefill pool, not this one).
-        """
-        if req.rid not in self._refetch_cache:
-            if self.refetch_delay is not None:
-                delay = max(0.0, self.refetch_delay(req))
-            else:
-                w = Workload.from_batch(
-                    [(req.context_len, req.context_len)], [], self.windows,
-                    batch_sequences=1)
-                delay, _ = step_cost(w)
-            self._refetch_cache[req.rid] = delay
-        return self._refetch_cache[req.rid]
-
-    def _ff_steps(self, active: List[_Active], pending: List[Request],
-                  now: float, dur: float) -> int:
-        """Max decode steps guaranteed uneventful (no completion, arrival,
-        or overflow)."""
-        to_finish = min(a.req.gen_len - a.generated for a in active)
-        kv = sum(a.kv_tokens for a in active)
-        to_overflow = max(0, (self.capacity - kv)) // max(1, len(active))
-        cap = self.policy.fast_forward_cap
-        steps = min(to_finish, to_overflow, cap)
-        if pending and dur > 0:
-            to_arrival = int((pending[0].arrival - now) / dur)
-            steps = min(steps, max(0, to_arrival))
-        return max(steps, 0)
-
-    # -- static batching (paper §2.3 baseline) ---------------------------------
-
-    def _run_static(self, requests: Sequence[Request],
-                    step_cost: StepCost) -> BatchingResult:
-        pending = sorted(requests, key=lambda r: r.arrival)
-        records = {r.rid: RequestRecord(r.rid, r.arrival, r.context_len,
-                                        r.gen_len) for r in requests}
-        bs = self.policy.max_batch_size or 32
-        now, iters, energy = 0.0, 0, 0.0
-        peak_kv = peak_batch = 0
-        i = 0
-        while i < len(pending):
-            batch: List[Request] = []
-            kv = 0
-            while (i < len(pending) and len(batch) < bs
-                   and kv + pending[i].context_len <= self.capacity):
-                batch.append(pending[i])
-                kv += pending[i].context_len
-                i += 1
-            if not batch:
-                # head prompt alone exceeds KV capacity: admit it solo and
-                # let it overshoot (the continuous path's liveness rule —
-                # refusing it would loop forever with no progress)
-                batch.append(pending[i])
-                i += 1
-            now = max(now, max(r.arrival for r in batch))
-            acts = [_Active(req=r, admitted_at=now, order=j)
-                    for j, r in enumerate(batch)]
-            # prefill all
-            w = self._workload([(a, a.req.context_len) for a in acts], [],
-                               acts)
-            dur, en = step_cost(w)
-            now += dur
-            energy += en
-            iters += 1
-            for a in acts:
-                a.prefill_done = a.req.context_len
-                a.generated = 1
-                records[a.req.rid].first_token_time = now
-                if a.done:            # gen_len == 1: done at prefill end,
-                    # not when the whole batch drains
-                    records[a.req.rid].finish_time = now
-            peak_kv = max(peak_kv, sum(a.kv_tokens for a in acts))
-            # decode until ALL finish (the static-batching inefficiency)
-            max_gen = max(r.gen_len for r in batch)
-            for _ in range(1, max_gen):
-                live = [a for a in acts if not a.done]
-                if not live:
-                    break
-                w = self._workload_decode([a.kv_tokens for a in live],
-                                          len(live))
-                dur, en = step_cost(w)
-                now += dur
-                energy += en
-                iters += 1
-                for a in acts:
-                    if not a.done:
-                        a.generated += 1
-                        if a.done:
-                            records[a.req.rid].finish_time = now
-                peak_kv = max(peak_kv, sum(a.kv_tokens for a in acts))
-            for a in acts:
-                if records[a.req.rid].finish_time == 0.0:
-                    records[a.req.rid].finish_time = now
-            peak_batch = max(peak_batch, len(batch))
-        return BatchingResult(records=list(records.values()),
-                              iterations=iters, total_time=now,
-                              total_energy=energy, preemptions=0,
-                              peak_kv_tokens=peak_kv, peak_batch=peak_batch)
-
-    # -- workload builders -----------------------------------------------------
-
-    def _workload(self, iter_prefills, iter_decodes,
-                  newly_admitted) -> Workload:
-        chunks = [(take, a.prefill_done + take) for a, take in iter_prefills]
-        kv_lens = [a.kv_tokens for a in iter_decodes]
-        # decode role: the encoder already ran in the prefill pool — its
-        # memory ships with the KV; only cross-attention reads remain here
-        enc_tokens = sum(a.req.source_len for a in newly_admitted) \
-            if self.is_encdec and self.role != "decode" else 0
-        pre_src = [a.req.source_len for a, _ in iter_prefills] \
-            if self.is_encdec else ()
-        dec_src = [a.req.source_len for a in iter_decodes] \
-            if self.is_encdec else ()
-        n_seq = len(iter_prefills) + len(iter_decodes)
-        return Workload.from_batch(chunks, kv_lens, self.windows,
-                                   batch_sequences=n_seq,
-                                   encoder_tokens=enc_tokens,
-                                   prefill_source=pre_src,
-                                   decode_source=dec_src)
-
-    def _workload_decode(self, kv_lens: List[int], n_seq: int) -> Workload:
-        return Workload.from_batch([], kv_lens, self.windows,
-                                   batch_sequences=n_seq)
+        from .engine import Engine   # deferred: engine imports our types
+        if self.policy.mode == "static" and self.role == "decode":
+            raise ValueError("decode role requires continuous batching")
+        engine = Engine()
+        pool = engine.add_pool(
+            "solo", [list(requests)], self.capacity, self.policy,
+            step_cost, windows=self.windows,
+            max_sequences=self.max_sequences, is_encdec=self.is_encdec,
+            role=self.role, refetch_delay=self.refetch_delay)
+        engine.run()
+        results = pool.results()
+        if not results:
+            return BatchingResult(records=[], iterations=0, total_time=0.0,
+                                  total_energy=0.0, preemptions=0,
+                                  peak_kv_tokens=0, peak_batch=0)
+        return results[0]

@@ -127,6 +127,15 @@ class Workload:
     def is_empty(self) -> bool:
         return self.total_tokens == 0 and self.encoder_tokens == 0
 
+    def signature(self) -> tuple:
+        """Hashable identity for step-cost memoization: two workloads with
+        equal signatures cost identically under any deterministic model."""
+        return (self.prefill_tokens, self.decode_tokens,
+                self.batch_sequences, self.encoder_tokens,
+                self.cross_prefill_qk, self.cross_decode_kv,
+                tuple(sorted(self.windows.items(),
+                             key=lambda kv: (kv[0] is None, kv[0] or 0))))
+
     @staticmethod
     def from_batch(prefill_chunks: Sequence, decode_kv_lens: Sequence,
                    model_windows: Sequence, batch_sequences: int = 0,

@@ -1,0 +1,69 @@
+"""Serving metrics shared by every simulation path.
+
+``SimulationReport`` is the per-plan outcome both the colocated and the
+disaggregated simulators emit (so one objective ranks both families), and
+``percentile`` is the rank-order estimator the paper's P95 numbers use.
+Promoted out of ``simulator.py`` so the disagg subsystem no longer
+imports private helpers or re-builds the infeasible report by hand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Rank-order percentile (no interpolation): the smallest sample with
+    at least ``q`` of the mass at or below it.  Returns 0.0 when empty."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(math.ceil(q * len(s))) - 1)]
+
+
+def p95(xs: List[float]) -> float:
+    return percentile(xs, 0.95)
+
+
+@dataclasses.dataclass
+class SimulationReport:
+    """Per-plan simulation outcome (the paper's 'comprehensive evaluation')."""
+
+    plan_label: str
+    e2e_latency: float            # seconds to drain the trace
+    total_energy: float           # joules across the whole cluster
+    ttft_mean: float
+    ttft_p95: float
+    tpot_mean: float
+    tpot_p95: float
+    latency_p95: float            # per-request e2e P95
+    throughput_tok_s: float
+    mfu: float
+    mbu: float
+    iterations: int
+    preemptions: int
+    peak_kv_tokens: int
+    peak_batch: int
+    feasible: bool = True
+    records: Optional[list] = None
+
+    @classmethod
+    def infeasible(cls, plan_label: str) -> "SimulationReport":
+        """The canonical 'this plan cannot run' report (ranked last by
+        every minimizing objective)."""
+        return cls(
+            plan_label=plan_label, e2e_latency=float("inf"),
+            total_energy=float("inf"), ttft_mean=0, ttft_p95=0,
+            tpot_mean=0, tpot_p95=0, latency_p95=0, throughput_tok_s=0,
+            mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
+            peak_batch=0, feasible=False)
+
+    def summary(self) -> str:
+        return (f"{self.plan_label}: e2e={self.e2e_latency:.2f}s "
+                f"energy={self.total_energy / 1e3:.2f}kJ "
+                f"TTFT={self.ttft_mean * 1e3:.1f}ms "
+                f"TPOT={self.tpot_mean * 1e3:.2f}ms "
+                f"MFU={self.mfu:.2%} MBU={self.mbu:.2%} "
+                f"preempt={self.preemptions}")

@@ -39,6 +39,7 @@ OBJECTIVES = {
     "energy": lambda r: r.total_energy,
     "ttft": lambda r: r.ttft_p95,
     "tpot": lambda r: r.tpot_p95,
+    "throughput": lambda r: -r.throughput_tok_s,   # maximize tok/s
 }
 
 
@@ -51,11 +52,25 @@ class SearchResult:
     num_feasible: int
     search_seconds: float
     objective: str = "latency"     # what the search ranked by
+    slo_ttft_s: Optional[float] = None   # the SLO filters the search used
+    slo_tpot_s: Optional[float] = None
+
+    def admissible(self, r: SimulationReport) -> bool:
+        """Feasible AND within the search's own SLO filters — the same
+        predicate ``search`` applied when picking ``best``, so ``top``
+        never surfaces plans the search itself rejected."""
+        if not r.feasible:
+            return False
+        if self.slo_ttft_s is not None and r.ttft_p95 > self.slo_ttft_s:
+            return False
+        if self.slo_tpot_s is not None and r.tpot_p95 > self.slo_tpot_s:
+            return False
+        return True
 
     def top(self, k: int = 5) -> List[SimulationReport]:
-        """Best-k feasible reports under the *search's own* objective."""
+        """Best-k admissible reports under the *search's own* objective."""
         key = OBJECTIVES.get(self.objective, OBJECTIVES["latency"])
-        return sorted((r for r in self.all_reports if r.feasible),
+        return sorted(filter(self.admissible, self.all_reports),
                       key=key)[:k]
 
 
@@ -122,6 +137,8 @@ class ApexSearch:
                max_disagg_plans: int = 256,
                pool_menu: Optional[Sequence[Cluster]] = None,
                max_total_devices: Optional[int] = None,
+               prefill_policy: Optional[BatchingPolicy] = None,
+               decode_policy: Optional[BatchingPolicy] = None,
                progress: Optional[Callable[[int, int], None]] = None
                ) -> SearchResult:
         """Rank plans under ``objective``; with ``disaggregated=True`` the
@@ -142,6 +159,12 @@ class ApexSearch:
         cross-pool link.  ``max_disagg_plans`` caps each disagg family
         separately (the shared-cluster splits, and the menu pairs jointly)
         — with a menu, up to ~2x that many disagg candidates simulate.
+
+        ``prefill_policy``/``decode_policy`` drive the two pools of every
+        disaggregated candidate with their own batching policies (e.g.
+        chunked prefill only on the prefill pool, a different
+        max_batch_size per pool), defaulting to the shared ``policy``;
+        colocated candidates always use ``policy``.
         """
         t0 = _time.perf_counter()
         obj = OBJECTIVES[objective]
@@ -192,6 +215,9 @@ class ApexSearch:
         best: Optional[SimulationReport] = None
         best_plan = None
         for i, (family, scheme, pools) in enumerate(candidates):
+            sim_kwargs = {} if family == "colocated" else {
+                "prefill_policy": prefill_policy,
+                "decode_policy": decode_policy}
             if family == "colocated":
                 plan = map_scheme(scheme, self.cluster)
                 sim = PlanSimulator(plan, self.store, self.coll)
@@ -208,7 +234,7 @@ class ApexSearch:
                 sim = DisaggSimulator(plan, pre_store, pre_coll,
                                       decode_store=dec_store,
                                       decode_coll=dec_coll)
-            rep = sim.simulate(requests, policy=policy)
+            rep = sim.simulate(requests, policy=policy, **sim_kwargs)
             reports.append(rep)
             if progress:
                 progress(i + 1, len(candidates))
@@ -229,7 +255,8 @@ class ApexSearch:
                             num_schemes=len(candidates),
                             num_feasible=sum(r.feasible for r in reports),
                             search_seconds=_time.perf_counter() - t0,
-                            objective=objective)
+                            objective=objective,
+                            slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s)
 
 
 def compare_three_plans(model: ModelIR, cluster: Cluster,

@@ -16,59 +16,32 @@ to the full model:
 
 It reports the paper's serving metrics: TTFT, TPOT, P95 latency, end-to-end
 latency, energy, MFU and MBU.
+
+Full-trace simulation runs on the event engine (core/engine.py): each
+model-DP replica is an engine actor, and the per-iteration cost callback
+is wrapped in a ``StepCostCache`` so identical iterations recurring across
+the event stream are costed once (utilization tallies are replayed in
+replica order afterwards, keeping MFU/MBU bit-identical to the sequential
+accounting of the legacy loop).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import List, Optional, Sequence, Tuple
 
-from .batching import BatchingModule, BatchingPolicy, BatchingResult
-from .ir import AttentionCell, Workload
+from .batching import BatchingPolicy
+from .engine import Engine, StepCostCache
+from .ir import Workload
 from .mapper import ExecutionPlan
+from .metrics import SimulationReport, p95
 from .profiles import CollectiveModel, ProfileStore
 from .quant import get_format
 from .templates import reshard_collectives
 from .trace import Request
 
-
-@dataclasses.dataclass
-class SimulationReport:
-    """Per-plan simulation outcome (the paper's 'comprehensive evaluation')."""
-
-    plan_label: str
-    e2e_latency: float            # seconds to drain the trace
-    total_energy: float           # joules across the whole cluster
-    ttft_mean: float
-    ttft_p95: float
-    tpot_mean: float
-    tpot_p95: float
-    latency_p95: float            # per-request e2e P95
-    throughput_tok_s: float
-    mfu: float
-    mbu: float
-    iterations: int
-    preemptions: int
-    peak_kv_tokens: int
-    peak_batch: int
-    feasible: bool = True
-    records: Optional[list] = None
-
-    def summary(self) -> str:
-        return (f"{self.plan_label}: e2e={self.e2e_latency:.2f}s "
-                f"energy={self.total_energy / 1e3:.2f}kJ "
-                f"TTFT={self.ttft_mean * 1e3:.1f}ms "
-                f"TPOT={self.tpot_mean * 1e3:.2f}ms "
-                f"MFU={self.mfu:.2%} MBU={self.mbu:.2%} "
-                f"preempt={self.preemptions}")
-
-
-def _p95(xs: List[float]) -> float:
-    if not xs:
-        return 0.0
-    s = sorted(xs)
-    return s[min(len(s) - 1, int(math.ceil(0.95 * len(s))) - 1)]
+# Backwards-compatible aliases: SimulationReport and the p95 estimator
+# used to live here (core/metrics.py is their home now).
+_p95 = p95
 
 
 class PlanSimulator:
@@ -83,12 +56,13 @@ class PlanSimulator:
         self.q = get_format(self.scheme.quant)
         self._flops_accum = 0.0
         self._bytes_accum = 0.0
+        self._last_inc = (0.0, 0.0)   # per-call accumulator increment
         # distinct attention windows in the model (for Workload building)
         self.windows = sorted(
             {getattr(c, "window", None) for c in self.scheme.model.block.cells},
             key=lambda w: (w is None, w))
 
-    # -- per-iteration cost (the Batching Module's step_cost callback) --------
+    # -- per-iteration cost (the engine's step_cost callback) -----------------
 
     def iteration_cost(self, w: Workload) -> Tuple[float, float]:
         """(time_s, energy_j) for one iteration of one replica.
@@ -102,8 +76,14 @@ class PlanSimulator:
         extrapolation applied at microbatch granularity — and it correctly
         denies PP a latency win in the flat memory-bound decode regime
         (stage time ~ weight reads, independent of microbatch size).
+
+        Side effect: folds the iteration's FLOP/byte tallies into
+        ``_flops_accum``/``_bytes_accum`` as ONE increment per call and
+        exposes it as ``_last_inc`` so the engine's ``StepCostCache`` can
+        replay cached calls into the same accounting.
         """
         if w.is_empty():
+            self._last_inc = (0.0, 0.0)
             return 0.0, 0.0
         scheme = self.scheme
         pp = scheme.pp_stages
@@ -112,6 +92,7 @@ class PlanSimulator:
         stage_energy = 0.0
         stage_flops = 0.0
         stage_bytes = 0.0
+        enc_flops = 0.0
         # One block's cells on one microbatch, scaled by blocks-per-stage.
         for idx, cs in enumerate(scheme.cell_schemes):
             for op in cs.compute_ops(mb, self.q):
@@ -145,7 +126,7 @@ class PlanSimulator:
                                              / max(1, mb.batch_sequences),
                                              0.0)},
                              batch_sequences=mb.batch_sequences)
-            enc_t, enc_e = self._encoder_cost(enc_w)
+            enc_t, enc_e, enc_flops = self._encoder_cost(enc_w)
             extra_time = max(extra_time, enc_t)
             stage_energy += enc_e
         head_tokens = mb.decode_tokens + (1 if mb.prefill_tokens else 0)
@@ -168,13 +149,16 @@ class PlanSimulator:
         # pp stage-visits per microbatch x pp microbatches per iteration:
         iter_time = pp * visit_time
         iter_energy = pp * pp * stage_energy
-        self._flops_accum += stage_flops * pp * pp
-        self._bytes_accum += stage_bytes * pp * pp
+        inc_f = stage_flops * pp * pp + enc_flops
+        inc_b = stage_bytes * pp * pp
+        self._flops_accum += inc_f
+        self._bytes_accum += inc_b
+        self._last_inc = (inc_f, inc_b)
         return iter_time, iter_energy
 
-    def _encoder_cost(self, enc_w: Workload) -> Tuple[float, float]:
+    def _encoder_cost(self, enc_w: Workload) -> Tuple[float, float, float]:
         enc = self.scheme.model.encoder
-        t_total = e_total = 0.0
+        t_total = e_total = f_total = 0.0
         # Encoder cells reuse the FIRST cell scheme's sharding (encoder TP
         # tracks decoder TP — standard enc-dec deployment).
         ref = self.scheme.cell_schemes[0]
@@ -183,8 +167,8 @@ class PlanSimulator:
                 t, e = self.store.query(op.op, op.axes, op.x / ref.shard)
                 t_total += t
                 e_total += e * ref.shard
-                self._flops_accum += op.flops
-        return t_total * enc.repeat, e_total * enc.repeat
+                f_total += op.flops
+        return t_total * enc.repeat, e_total * enc.repeat, f_total
 
     # -- full-trace simulation --------------------------------------------------
 
@@ -197,26 +181,27 @@ class PlanSimulator:
         self._bytes_accum = 0.0
         cap = scheme.kv_token_capacity(self.plan.cluster.device.hbm_bytes)
         if cap <= 0:
-            return SimulationReport(
-                plan_label=scheme.label(), e2e_latency=float("inf"),
-                total_energy=float("inf"), ttft_mean=0, ttft_p95=0,
-                tpot_mean=0, tpot_p95=0, latency_p95=0, throughput_tok_s=0,
-                mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
-                peak_batch=0, feasible=False)
+            return SimulationReport.infeasible(scheme.label())
 
         # model-level DP: round-robin request routing to independent replicas
-        replicas: List[List[Request]] = [[] for _ in range(scheme.model_dp)]
+        buckets: List[List[Request]] = [[] for _ in range(scheme.model_dp)]
         for i, r in enumerate(requests):
-            replicas[i % scheme.model_dp].append(r)
+            buckets[i % scheme.model_dp].append(r)
 
-        results: List[BatchingResult] = []
-        is_encdec = scheme.model.encoder is not None
-        for reqs in replicas:
-            if not reqs:
-                continue
-            module = BatchingModule(cap, policy, model_windows=self.windows,
-                                    is_encdec=is_encdec)
-            results.append(module.run(reqs, self.iteration_cost))
+        engine = Engine()
+        pool = engine.add_pool(
+            "serve", buckets, cap, policy,
+            StepCostCache(self.iteration_cost, owner=self),
+            windows=self.windows,
+            is_encdec=scheme.model.encoder is not None)
+        engine.run()
+        results = pool.results()
+
+        # replay the memoized cost calls into the utilization accumulators
+        # in replica order (the legacy sequential summation order)
+        self._flops_accum = 0.0
+        self._bytes_accum = 0.0
+        pool.replay_accumulators(self)
 
         records = [rec for res in results for rec in res.records]
         ttfts = [r.ttft for r in records]
@@ -226,8 +211,6 @@ class PlanSimulator:
         total_energy = sum(res.total_energy for res in results)
         gen_tokens = sum(r.gen_len for r in records)
 
-        # _flops_accum already spans all replicas (each replica's batching
-        # module drove the same shared callback).
         n_dev = scheme.total_devices
         peak = self.plan.cluster.device.flops(self.q.compute_dtype)
         bw = self.plan.cluster.device.hbm_bw
@@ -241,10 +224,10 @@ class PlanSimulator:
             e2e_latency=total_time,
             total_energy=total_energy,
             ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            ttft_p95=_p95(ttfts),
+            ttft_p95=p95(ttfts),
             tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
-            tpot_p95=_p95(tpots),
-            latency_p95=_p95(e2es),
+            tpot_p95=p95(tpots),
+            latency_p95=p95(e2es),
             throughput_tok_s=gen_tokens / total_time if total_time else 0.0,
             mfu=min(mfu, 1.0), mbu=min(mbu, 1.0),
             iterations=sum(r.iterations for r in results),

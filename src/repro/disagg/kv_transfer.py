@@ -53,6 +53,13 @@ class TransferEstimate:
     def effective_gbps(self) -> float:
         return (self.nbytes / self.wire_s / 1e9) if self.wire_s > 0 else 0.0
 
+    @property
+    def stream_lead_s(self) -> float:
+        """How long before prefill completion the stream already occupied
+        the wire (layerwise mode overlaps all but the exposed tail with
+        the prefill itself; blocking mode has no lead)."""
+        return max(0.0, self.wire_s - self.delay_s)
+
 
 class KVTransferModel:
     """Per-request KV handoff: bytes from the IR, time from the cluster.

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from ..core.batching import BatchingPolicy
 from ..core.cluster import Cluster, NetworkLevel, cross_pool_link
 from ..core.ir import ModelIR
 from ..core.mapper import ExecutionPlan, map_scheme
@@ -95,6 +96,12 @@ class DisaggPlan:
     decode_plan: ExecutionPlan
     transfer_span: int        # devices spanned by the in-cluster link
     cross_level: Optional[NetworkLevel] = None   # explicit inter-pool link
+    # per-pool batching policies (None = the simulation-wide policy);
+    # e.g. chunked prefill only on the prefill pool, or a different
+    # max_batch_size per pool — each pool's replicas are engine actors
+    # driven by their own SchedulerPolicy, so the pools need not agree
+    prefill_policy: Optional[BatchingPolicy] = None
+    decode_policy: Optional[BatchingPolicy] = None
 
     @property
     def homogeneous(self) -> bool:

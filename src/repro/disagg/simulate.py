@@ -1,35 +1,41 @@
 """Coupled two-pool simulation of disaggregated prefill/decode serving.
 
-The prefill pool runs prefill-only iterations (requests truncated to their
-first token), finished prompts hand their KV cache to the decode pool
-through the KV-transfer model, and the decode pool runs decode-only
-continuous batching with *transfer-delayed admissions*: a request becomes
-visible to the decode pool only at
+Both pools run inside ONE event engine (core/engine.py) on a single
+global clock: the prefill pool's replicas run prefill-only iterations
+(requests truncated to their first token), finished prompts hand their KV
+cache to the decode pool through the KV-transfer model, and the decode
+pool runs decode-only continuous batching with *transfer-delayed
+admissions* — a request becomes visible to a decode replica when its
+transfer completes on the shared cross-pool wire.
 
-    prefill_finish + transfer_delay(ctx_len, transfer_mode).
+Engine coupling (both on by default, switchable for A/B studies):
 
-Both pools are ordinary ``BatchingModule`` instances driven by their own
-``PlanSimulator`` iteration-cost callbacks — the decode pool in
-``role="decode"`` (admission materializes the shipped prompt KV).  Both
-pools share one virtual clock origin, so the merged per-request records
-(TTFT from the prefill pool, completion from the decode pool) compose into
-the same ``SimulationReport`` the colocated simulator emits, and the joint
-search (core/search.py) ranks colocated and disaggregated plans under one
-objective.
+  * ``congestion=True`` — simultaneous prefill completions contend for
+    the cross-pool link: transfers claim a ``SharedLink`` FIFO in
+    completion order, each occupying the wire for its full serialization
+    time (layerwise streams lead the completion by ``stream_lead_s``).
+    With ``congestion=False`` (or a wire fast enough never to queue)
+    every transfer takes its independent per-request time — the
+    pre-engine behavior, kept as the golden baseline.
+  * ``reprefill_occupancy=True`` — a decode-pool preemption routes the
+    victim's re-fetch back through the engine as a REAL re-prefill job
+    on the prefill pool (occupying it, delaying other prompts' TTFT)
+    followed by a fresh transfer over the shared link.  With
+    ``reprefill_occupancy=False`` the victim is only charged the
+    full-cache wire delay (the pre-engine model: the delay was paid but
+    the prefill pool never re-ran the prompt).
+
+Per-pool policies: ``simulate(prefill_policy=..., decode_policy=...)``
+(or the same fields on ``DisaggPlan``) drive each pool's replicas with
+their own ``SchedulerPolicy`` — e.g. chunked prefill only on the prefill
+pool — defaulting to the shared ``policy``.
 
 Heterogeneous pools: when the plan carries per-pool clusters (different
 ``DeviceSpec`` per pool), each pool's iteration costs, KV capacity, and
 energy come from its OWN cluster — per-pool ``ProfileStore`` /
 ``CollectiveModel`` (and therefore each pool's own ``PowerModel``) — and
 the KV handoff is costed on the plan's explicit cross-pool network level.
-With a shared cluster this degenerates to the homogeneous PR-1 behavior.
-
-First-order modeling choices, in the open:
-  * per-request transfers are independent (no cross-pool link congestion);
-  * prefill-side KV is freed at handoff (no holding cost while draining);
-  * a decode-pool preemption re-fetches its prompt KV through the same
-    KV-transfer model (full-cache wire time — a re-fetch cannot stream
-    behind a prefill that already happened) and its wire energy is charged.
+With a shared cluster this degenerates to the homogeneous behavior.
 """
 
 from __future__ import annotations
@@ -37,12 +43,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from ..core.batching import (BatchingModule, BatchingPolicy, BatchingResult,
-                             RequestRecord)
+from ..core.batching import BatchingPolicy, RequestRecord
+from ..core.engine import Engine, SharedLink, StepCostCache
+from ..core.ir import Workload
+from ..core.metrics import SimulationReport, p95
 from ..core.profiles import AnalyticBackend, CollectiveModel, ProfileStore
-from ..core.simulator import PlanSimulator, SimulationReport, _p95
+from ..core.simulator import PlanSimulator
 from ..core.trace import Request
-from ..serving.router import BacklogBalancer
+from ..serving.router import BacklogBalancer, derive_drain_rate
 from .kv_transfer import KVTransferModel
 from .pools import DisaggPlan
 
@@ -91,118 +99,223 @@ class DisaggSimulator:
 
     # -- helpers --------------------------------------------------------------
 
-    def _infeasible(self) -> SimulationReport:
-        return SimulationReport(
-            plan_label=self.plan.label(), e2e_latency=float("inf"),
-            total_energy=float("inf"), ttft_mean=0, ttft_p95=0,
-            tpot_mean=0, tpot_p95=0, latency_p95=0, throughput_tok_s=0,
-            mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
-            peak_batch=0, feasible=False)
-
-    @staticmethod
-    def _route(requests: Sequence[Request], n_replicas: int, cost_of,
-               drain_rate: float) -> List[List[Request]]:
-        """Decayed shortest-queue dispatch across a pool's replicas — the
-        same balancer (and per-pool drain rates) the serving PoolRouter
-        uses (serving/router.py), so simulated and real dispatch agree."""
-        bal = BacklogBalancer(n_replicas, drain_rate=drain_rate)
-        buckets: List[List[Request]] = [[] for _ in range(n_replicas)]
-        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
-            buckets[bal.assign(r.arrival, cost_of(r))].append(r)
-        return buckets
+    def _drain_rates(self, requests: Sequence[Request],
+                     dec_policy: BatchingPolicy) -> tuple:
+        """Per-replica drain rates for the two pools' backlog balancers,
+        derived from each pool's OWN iteration throughput on a
+        trace-representative workload (mean prompt for the prefill pool;
+        a mean-KV decode batch for the decode pool)."""
+        n = max(1, len(requests))
+        ctx = max(1, sum(r.context_len for r in requests) // n)
+        gen = max(1, sum(r.gen_len for r in requests) // n)
+        w_pre = Workload.from_batch([(ctx, ctx)], [], self.pre_sim.windows,
+                                    batch_sequences=1)
+        t_pre, _ = self.pre_sim.iteration_cost(w_pre)
+        bs = dec_policy.max_batch_size or 32
+        w_dec = Workload.from_batch([], [ctx + gen // 2] * bs,
+                                    self.dec_sim.windows,
+                                    batch_sequences=bs)
+        t_dec, _ = self.dec_sim.iteration_cost(w_dec)
+        return (derive_drain_rate(ctx, t_pre, fallback=4096.0),
+                derive_drain_rate(bs, t_dec, fallback=512.0))
 
     # -- full-trace simulation ------------------------------------------------
 
     def simulate(self, requests: Sequence[Request],
                  policy: Optional[BatchingPolicy] = None,
-                 keep_records: bool = False) -> SimulationReport:
-        policy = policy or BatchingPolicy()
-        if policy.mode == "static":
+                 keep_records: bool = False,
+                 prefill_policy: Optional[BatchingPolicy] = None,
+                 decode_policy: Optional[BatchingPolicy] = None,
+                 congestion: bool = True,
+                 reprefill_occupancy: bool = True,
+                 link: Optional[SharedLink] = None) -> SimulationReport:
+        plan = self.plan
+        pre_pol = (prefill_policy or plan.prefill_policy or policy
+                   or BatchingPolicy())
+        dec_pol = (decode_policy or plan.decode_policy or policy
+                   or BatchingPolicy())
+        if pre_pol.mode == "static" or dec_pol.mode == "static":
             # static batching has no meaningful decode-only pool (the
             # strawman prefills and drains one batch at a time); report
             # the plan as infeasible rather than crash mid-search
-            return self._infeasible()
-        # the pool simulators' MFU/MBU accumulators are driven through
-        # iteration_cost (not their own simulate()), so reset them here
-        for sim in (self.pre_sim, self.dec_sim):
-            sim._flops_accum = 0.0
-            sim._bytes_accum = 0.0
+            return SimulationReport.infeasible(plan.label())
         pre_s, dec_s = self.scheme.prefill, self.scheme.decode
         pre_cap = pre_s.kv_token_capacity(
-            self.plan.prefill_cluster.device.hbm_bytes)
+            plan.prefill_cluster.device.hbm_bytes)
         dec_cap = dec_s.kv_token_capacity(
-            self.plan.decode_cluster.device.hbm_bytes)
+            plan.decode_cluster.device.hbm_bytes)
         if pre_cap <= 0 or dec_cap <= 0:
-            return self._infeasible()
+            return SimulationReport.infeasible(plan.label())
 
         is_encdec = self.scheme.model.encoder is not None
-
-        # ---- prefill pool: prefill-only iterations ----
-        pre_reqs = [dataclasses.replace(r, gen_len=1) for r in requests]
-        pre_buckets = self._route(pre_reqs, pre_s.model_dp,
-                                  lambda r: float(r.context_len),
-                                  drain_rate=4096.0)
-        pre_results: List[BatchingResult] = []
-        for bucket in pre_buckets:
-            if not bucket:
-                continue
-            module = BatchingModule(pre_cap, policy,
-                                    model_windows=self.pre_sim.windows,
-                                    is_encdec=is_encdec)
-            pre_results.append(module.run(bucket,
-                                          self.pre_sim.iteration_cost))
-        pre_records: Dict[int, RequestRecord] = {
-            rec.rid: rec for res in pre_results for rec in res.records}
-
-        # ---- KV handoff: transfer-delayed decode admission ----
-        # gen_len <= 1 requests finish at the prefill pool and never ship
         by_rid = {r.rid: r for r in requests}
         lanes = min(pre_s.devices_per_replica, dec_s.devices_per_replica)
+        ests: Dict[int, object] = {}
+
+        def est_of(req: Request):
+            if req.rid not in ests:
+                ests[req.rid] = self.kv.estimate(
+                    self.scheme.model, req.context_len, pre_s.quant,
+                    plan.transfer_span, lanes=lanes)
+            return ests[req.rid]
+
+        pre_rate, dec_rate = self._drain_rates(requests, dec_pol)
+
+        # ---- prefill pool: prefill-only iterations, balancer-routed ----
+        # (decayed shortest-queue dispatch — the same balancer the serving
+        # PoolRouter uses, so simulated and real dispatch agree; the
+        # balancer instance stays live to also place re-prefill jobs)
+        pre_reqs = [dataclasses.replace(r, gen_len=1) for r in requests]
+        pre_bal = BacklogBalancer(pre_s.model_dp, drain_rate=pre_rate)
+        pre_buckets: List[List[Request]] = [[] for _ in range(pre_s.model_dp)]
+        for r in sorted(pre_reqs, key=lambda r: (r.arrival, r.rid)):
+            pre_buckets[pre_bal.assign(r.arrival,
+                                       float(r.context_len))].append(r)
+
+        engine = Engine()
+        if link is None:
+            link = SharedLink(congestion=congestion)
+        dec_bal = BacklogBalancer(dec_s.model_dp, drain_rate=dec_rate)
+        parked: Dict[int, tuple] = {}   # refetch rid -> (replica, req, t0)
+        state = {"refetch_seq": 0}
+        finishes: List[tuple] = []      # staged mode: (finish_time, req)
+
+        def on_prefill_finish(replica, req, rec, now):
+            if not reprefill_occupancy:
+                # no decode->prefill feedback: transfers are resolved in
+                # finish order after the prefill pool drains (staged run),
+                # which hands the decode pool its full arrival horizon —
+                # the same information structure as the pre-engine loops
+                finishes.append((now, by_rid[req.rid]))
+                return
+            if req.rid < 0:
+                # a re-prefill occupancy job completed: re-ship the cache
+                # and return the victim to its decode replica
+                dec_rep, victim, t0 = parked.pop(req.rid)
+                est = est_of(victim)
+                done = link.transfer(now, est)
+                dec_pool.incoming_unknown -= 1
+
+                def stamp_and_route(t, rep=dec_rep, v=victim, t0=t0):
+                    vrec = rep.records[v.rid]
+                    vrec.refetch_s += t - t0
+                    rep.kv_refetch_s += t - t0
+                    return rep
+
+                engine.deliver(dec_pool, stamp_and_route,
+                               dataclasses.replace(victim, arrival=done),
+                               done)
+                return
+            orig = by_rid[req.rid]
+            if orig.gen_len <= 1:       # finishes at the prefill pool
+                return
+            done = link.transfer(now, est_of(orig))
+            engine.deliver(
+                dec_pool,
+                lambda t, g=float(orig.gen_len):
+                dec_pool.replicas[dec_bal.assign(t, g)],
+                dataclasses.replace(orig, arrival=done), done)
+
+        def on_decode_preempt(dec_rep, victim, now):
+            # route the re-fetch through the engine: a REAL re-prefill on
+            # the prefill pool (occupying it), then a fresh transfer.
+            # Placement reads the prefill replicas' LIVE queue depth (the
+            # trace pre-pass balancer's clock has already run to the last
+            # arrival and would see a stale, future-contaminated backlog)
+            state["refetch_seq"] -= 1
+            rid = state["refetch_seq"]
+            job = Request(rid=rid, arrival=now,
+                          context_len=victim.context_len, gen_len=1,
+                          source_len=victim.source_len)
+            parked[rid] = (dec_rep, victim, now)
+            dec_pool.incoming_unknown += 1
+            target = min(
+                pre_pool.replicas,
+                key=lambda rep: (sum(r.context_len for r in rep.pending)
+                                 + sum(a.prefill_remaining
+                                       for a in rep.active), rep.index))
+            target.shadow.add(rid)
+            engine.deliver(pre_pool, target, job, now)
+
+        def refetch_wire_delay(r: Request) -> float:
+            # delay-only model: full-cache wire time (no prefill left to
+            # stream behind), costed through the same transfer model
+            return est_of(r).wire_s
+
+        def add_decode_pool(buckets):
+            return engine.add_pool(
+                "decode", buckets, dec_cap, dec_pol,
+                StepCostCache(self.dec_sim.iteration_cost,
+                              owner=self.dec_sim),
+                windows=self.dec_sim.windows, is_encdec=is_encdec,
+                role="decode",
+                refetch_delay=None if reprefill_occupancy
+                else refetch_wire_delay,
+                on_preempt=on_decode_preempt if reprefill_occupancy
+                else None)
+
+        pre_pool = engine.add_pool(
+            "prefill", pre_buckets, pre_cap, pre_pol,
+            StepCostCache(self.pre_sim.iteration_cost, owner=self.pre_sim),
+            windows=self.pre_sim.windows, is_encdec=is_encdec,
+            on_finish=on_prefill_finish)
+        if reprefill_occupancy:
+            # fully coupled: one joint event loop; transfers and re-fetch
+            # re-prefills flow between the pools as live events
+            dec_pool = add_decode_pool([[] for _ in range(dec_s.model_dp)])
+            dec_pool.upstream = pre_pool   # bounds decode fast-forward
+            engine.run()
+        else:
+            # staged: drain the prefill pool, resolve transfers through
+            # the (possibly congested) link in completion order, then run
+            # the decode pool with every arrival known
+            engine.run()
+            dec_reqs = []
+            for t_finish, req in finishes:
+                if req.gen_len <= 1:
+                    continue
+                done = link.transfer(t_finish, est_of(req))
+                dec_reqs.append(dataclasses.replace(req, arrival=done))
+            dec_buckets: List[List[Request]] = [
+                [] for _ in range(dec_s.model_dp)]
+            for r in sorted(dec_reqs, key=lambda r: (r.arrival, r.rid)):
+                dec_buckets[dec_bal.assign(r.arrival,
+                                           float(r.gen_len))].append(r)
+            dec_pool = add_decode_pool(dec_buckets)
+            engine.run()
+
+        pre_results = pre_pool.results()
+        dec_results = dec_pool.results()
+        results = pre_results + dec_results
+        if not results:
+            return SimulationReport.infeasible(plan.label())
+
+        # replay memoized cost calls into the utilization accumulators in
+        # pool/replica order (the legacy sequential summation order)
+        for sim, pool in ((self.pre_sim, pre_pool),
+                          (self.dec_sim, dec_pool)):
+            sim._flops_accum = 0.0
+            sim._bytes_accum = 0.0
+            pool.replay_accumulators(sim)
+
+        pre_records: Dict[int, RequestRecord] = {
+            rec.rid: rec for res in pre_results for rec in res.records}
+        dec_records: Dict[int, RequestRecord] = {
+            rec.rid: rec for res in dec_results for rec in res.records}
+
+        # ---- transfer energy: every shipped cache + every re-fetch ----
+        # (energy is congestion-independent — the same bytes cross the
+        # wire whether or not they queued)
         transfer_energy = 0.0
-        dec_reqs: List[Request] = []
-        for rid, rec in pre_records.items():
+        for rid in pre_records:
             req = by_rid[rid]
             if req.gen_len <= 1:
                 continue
-            est = self.kv.estimate(self.scheme.model, req.context_len,
-                                   pre_s.quant, self.plan.transfer_span,
-                                   lanes=lanes)
-            transfer_energy += est.energy_j
-            ready = rec.finish_time + est.delay_s
-            dec_reqs.append(dataclasses.replace(req, arrival=ready))
-
-        # ---- decode pool: decode-only continuous batching ----
-        # a preempted request must re-fetch its prompt KV before it can be
-        # re-admitted: full-cache wire time (no prefill left to stream
-        # behind), costed through the same transfer model
-        def refetch_delay(r: Request) -> float:
-            return self.kv.estimate(self.scheme.model, r.context_len,
-                                    pre_s.quant, self.plan.transfer_span,
-                                    lanes=lanes).wire_s
-
-        dec_buckets = self._route(dec_reqs, dec_s.model_dp,
-                                  lambda r: float(r.gen_len),
-                                  drain_rate=512.0)
-        dec_results: List[BatchingResult] = []
-        for bucket in dec_buckets:
-            if not bucket:
-                continue
-            module = BatchingModule(dec_cap, policy,
-                                    model_windows=self.dec_sim.windows,
-                                    is_encdec=is_encdec, role="decode",
-                                    refetch_delay=refetch_delay)
-            dec_results.append(module.run(bucket,
-                                          self.dec_sim.iteration_cost))
-        dec_records: Dict[int, RequestRecord] = {
-            rec.rid: rec for res in dec_results for rec in res.records}
-        # each re-fetch re-serializes the cache on the wire: charge it
+            transfer_energy += est_of(req).energy_j
         for rec in dec_records.values():
             if rec.preemptions:
-                est = self.kv.estimate(self.scheme.model,
-                                       by_rid[rec.rid].context_len,
-                                       pre_s.quant, self.plan.transfer_span,
-                                       lanes=lanes)
-                transfer_energy += rec.preemptions * est.energy_j
+                transfer_energy += rec.preemptions * est_of(
+                    by_rid[rec.rid]).energy_j
 
         # ---- merge per-request records across the two pools ----
         merged: List[RequestRecord] = []
@@ -224,9 +337,6 @@ class DisaggSimulator:
         ttfts = [r.ttft for r in merged]
         tpots = [r.tpot for r in merged if r.gen_len > 1]
         e2es = [r.e2e for r in merged]
-        results = pre_results + dec_results
-        if not results:
-            return self._infeasible()
         total_time = max(res.total_time for res in results)
         total_energy = (sum(res.total_energy for res in results)
                         + transfer_energy)
@@ -235,8 +345,8 @@ class DisaggSimulator:
         # utilization against each pool's OWN silicon: a H100-prefill/
         # H200-decode deployment is normalized by the sum of per-pool
         # peak rates, not one device's numbers
-        pre_dev = self.plan.prefill_cluster.device
-        dec_dev = self.plan.decode_cluster.device
+        pre_dev = plan.prefill_cluster.device
+        dec_dev = plan.decode_cluster.device
         n_pre, n_dec = self.scheme.prefill_devices, self.scheme.decode_devices
         flops = self.pre_sim._flops_accum + self.dec_sim._flops_accum
         nbytes = self.pre_sim._bytes_accum + self.dec_sim._bytes_accum
@@ -247,14 +357,14 @@ class DisaggSimulator:
         mbu = nbytes / (total_time * bw) if total_time > 0 else 0.0
 
         return SimulationReport(
-            plan_label=self.plan.label(),
+            plan_label=plan.label(),
             e2e_latency=total_time,
             total_energy=total_energy,
             ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            ttft_p95=_p95(ttfts),
+            ttft_p95=p95(ttfts),
             tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
-            tpot_p95=_p95(tpots),
-            latency_p95=_p95(e2es),
+            tpot_p95=p95(tpots),
+            latency_p95=p95(e2es),
             throughput_tok_s=gen_tokens / total_time if total_time else 0.0,
             mfu=min(mfu, 1.0), mbu=min(mbu, 1.0),
             iterations=sum(r.iterations for r in results),

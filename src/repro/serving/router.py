@@ -27,6 +27,19 @@ if TYPE_CHECKING:  # real-engine types only; keeps this module jax-free
     from .engine import EngineReport, ServingEngine
 
 
+def derive_drain_rate(tokens_per_iter: float, iter_seconds: float,
+                      fallback: float) -> float:
+    """Tokens/s one replica retires, from a measured (or simulated)
+    iteration: the principled way to size a ``BacklogBalancer``'s decay.
+    The disaggregated simulator derives each pool's rate from its own
+    iteration cost on a trace-representative workload (replacing the old
+    hard-coded 4096/512 constants); ``fallback`` covers degenerate
+    measurements (zero/negative duration)."""
+    if iter_seconds > 0.0 and tokens_per_iter > 0.0:
+        return tokens_per_iter / iter_seconds
+    return fallback
+
+
 class BacklogBalancer:
     """Least-estimated-backlog assignment with time-based drain decay.
 
@@ -34,7 +47,8 @@ class BacklogBalancer:
     consecutive dispatches the recorded backlog of every replica decays by
     ``elapsed * drain_rate`` (floored at zero).  The default is deliberately
     conservative — underestimating drain only makes the balancer more
-    eager to spread load, never starves a replica.
+    eager to spread load, never starves a replica: prefer a measured rate
+    via ``derive_drain_rate`` when an iteration-cost model is at hand.
     """
 
     def __init__(self, num_replicas: int, drain_rate: float = 512.0):

@@ -1,0 +1,110 @@
+"""Golden-report capture for the event-engine refactor (PR 3).
+
+Run ONCE against the pre-refactor per-replica loops (BatchingModule's
+``_run_continuous``/``_run_static`` and DisaggSimulator's coupled two-pool
+dance) to freeze their numbers; the engine-backed rewrite must reproduce
+them exactly (tests/test_engine_golden.py).  The legacy loops are deleted
+by the refactor, so this script cannot regenerate the goldens afterwards —
+the JSON is a frozen artifact of commit ef964aa.
+
+    PYTHONPATH=src python tests/golden/capture.py
+"""
+
+import json
+import os
+
+from repro.core import (BatchingPolicy, CollectiveModel, ProfileStore,
+                        generate_schemes, get_trace, h100_node,
+                        ir_from_hf_config, map_scheme)
+from repro.core.profiles import AnalyticBackend
+from repro.core.simulator import PlanSimulator
+from repro.disagg import DisaggSimulator, generate_disagg_schemes, \
+    map_disagg_scheme
+
+SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+
+TRACES = [("summarization", 2.0), ("creation", 1.0), ("chat", 4.0)]
+N_REQ = 48
+
+REPORT_FIELDS = [
+    "plan_label", "e2e_latency", "total_energy", "ttft_mean", "ttft_p95",
+    "tpot_mean", "tpot_p95", "latency_p95", "throughput_tok_s", "mfu",
+    "mbu", "iterations", "preemptions", "peak_kv_tokens", "peak_batch",
+    "feasible",
+]
+
+
+def report_dict(rep):
+    d = {f: getattr(rep, f) for f in REPORT_FIELDS}
+    d["records"] = sorted(
+        (r.rid, r.first_token_time, r.finish_time, r.preemptions,
+         r.refetch_s) for r in rep.records)
+    return d
+
+
+def colocated_scheme(model, dp):
+    for s in generate_schemes(model, 8, quant="fp16"):
+        if (s.model_dp == dp and s.pp_stages == 1
+                and s.is_feasible_for_current_systems()):
+            return s
+    raise RuntimeError("no scheme")
+
+
+def disagg_scheme(model, cluster, mode):
+    for s in generate_disagg_schemes(model, cluster, max_plans=100000,
+                                     transfer_mode=mode):
+        if (s.prefill_devices == 4 and s.decode_devices == 4
+                and s.prefill.model_dp == 1 and s.decode.model_dp == 1
+                and s.prefill.pp_stages == 1 and s.decode.pp_stages == 1):
+            return s
+    raise RuntimeError("no disagg scheme")
+
+
+def main():
+    model = ir_from_hf_config(SMALL, name="tiny")
+    cluster = h100_node(8)
+    store = ProfileStore(AnalyticBackend(cluster))
+    coll = CollectiveModel(cluster)
+    out = {"colocated": [], "disagg": []}
+
+    policies = {
+        "continuous": BatchingPolicy(),
+        "chunked": BatchingPolicy(chunked_prefill=128),
+        "static": BatchingPolicy(mode="static", max_batch_size=8),
+        "capped": BatchingPolicy(max_batch_size=4, fast_forward=False),
+    }
+    for dp in (1, 2):
+        scheme = colocated_scheme(model, dp)
+        plan = map_scheme(scheme, cluster)
+        for pname, pol in policies.items():
+            for trace, rate in TRACES:
+                reqs = get_trace(trace, arrival_rate=rate, seed=11,
+                                 num_requests=N_REQ)
+                sim = PlanSimulator(plan, store, coll)
+                rep = sim.simulate(reqs, policy=pol, keep_records=True)
+                out["colocated"].append(
+                    {"dp": dp, "policy": pname, "trace": trace,
+                     "rate": rate, "report": report_dict(rep)})
+
+    for mode in ("layerwise", "blocking"):
+        scheme = disagg_scheme(model, cluster, mode)
+        plan = map_disagg_scheme(scheme, cluster)
+        for trace, rate in TRACES:
+            reqs = get_trace(trace, arrival_rate=rate, seed=11,
+                             num_requests=N_REQ)
+            sim = DisaggSimulator(plan, store, coll)
+            rep = sim.simulate(reqs, keep_records=True)
+            out["disagg"].append(
+                {"mode": mode, "trace": trace, "rate": rate,
+                 "report": report_dict(rep)})
+
+    path = os.path.join(os.path.dirname(__file__), "core_golden.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {path}: {len(out['colocated'])} colocated + "
+          f"{len(out['disagg'])} disagg reports")
+
+
+if __name__ == "__main__":
+    main()

@@ -508,7 +508,11 @@ def test_coupled_refetch_raises_tpot_in_kv_constrained_pool():
                               CollectiveModel(pre_c))
         if free:
             sim.kv = _FreeRefetchKV(sim.kv)
-        return sim.simulate(reqs, keep_records=True)
+        # delay-mode re-fetch (the model this regression test pins);
+        # the engine-coupled default — re-prefill occupancy + shared-link
+        # queuing — is covered by tests/test_engine_golden.py
+        return sim.simulate(reqs, keep_records=True, congestion=False,
+                            reprefill_occupancy=False)
 
     paid, free = run(False), run(True)
     assert paid.feasible and free.feasible

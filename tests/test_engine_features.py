@@ -1,0 +1,171 @@
+"""Satellite features riding on the event-engine refactor: per-pool
+batching policies, SLO-aware SearchResult.top(), the throughput
+objective, shared metrics helpers, and derived router drain rates."""
+
+import pytest
+
+from repro.core import (ApexSearch, BatchingPolicy, CollectiveModel,
+                        ProfileStore, get_trace, h100_node,
+                        ir_from_hf_config, percentile)
+from repro.core.metrics import SimulationReport, p95
+from repro.core.profiles import AnalyticBackend
+from repro.core.search import OBJECTIVES, SearchResult
+from repro.disagg import DisaggSimulator, generate_disagg_schemes, \
+    map_disagg_scheme
+from repro.serving.router import derive_drain_rate
+
+SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+
+
+def small_model():
+    return ir_from_hf_config(SMALL, name="tiny")
+
+
+# ---------------------------------------------------------------------------
+# per-pool batching policies
+# ---------------------------------------------------------------------------
+
+def _shared_cluster_plan(model, cluster):
+    scheme = next(s for s in generate_disagg_schemes(model, cluster,
+                                                     max_plans=100000)
+                  if s.prefill_devices == 4 and s.decode_devices == 4
+                  and s.prefill.model_dp == 1 and s.decode.model_dp == 1)
+    return map_disagg_scheme(scheme, cluster)
+
+
+def test_per_pool_policies_drive_each_pool():
+    """Chunked prefill on the prefill pool only: the prefill pool's
+    iteration stream shows bounded prefill chunks while the decode pool
+    runs plain continuous batching — and the run differs from the
+    shared-policy run."""
+    model = small_model()
+    cluster = h100_node(8)
+    plan = _shared_cluster_plan(model, cluster)
+    store = ProfileStore(AnalyticBackend(cluster))
+    coll = CollectiveModel(cluster)
+    reqs = get_trace("summarization", arrival_rate=2.0, seed=1,
+                     num_requests=16)
+
+    sim = DisaggSimulator(plan, store, coll)
+    shared = sim.simulate(reqs)
+    chunked = sim.simulate(reqs,
+                           prefill_policy=BatchingPolicy(chunked_prefill=64),
+                           decode_policy=BatchingPolicy(max_batch_size=4))
+    assert shared.feasible and chunked.feasible
+    # chunking a 2.7k-token mean prompt into 64-token slices takes many
+    # more prefill iterations
+    assert chunked.iterations > shared.iterations
+    assert chunked.peak_batch <= max(shared.peak_batch, 16)
+
+
+def test_plan_level_pool_policies_respected():
+    import dataclasses
+    model = small_model()
+    cluster = h100_node(8)
+    plan = _shared_cluster_plan(model, cluster)
+    plan = dataclasses.replace(
+        plan, prefill_policy=BatchingPolicy(chunked_prefill=64))
+    store = ProfileStore(AnalyticBackend(cluster))
+    sim = DisaggSimulator(plan, store, CollectiveModel(cluster))
+    reqs = get_trace("summarization", arrival_rate=2.0, seed=1,
+                     num_requests=16)
+    plan_pol = sim.simulate(reqs)
+    explicit = sim.simulate(
+        reqs, prefill_policy=BatchingPolicy(chunked_prefill=64))
+    assert plan_pol.iterations == explicit.iterations
+    assert plan_pol.e2e_latency == explicit.e2e_latency
+
+
+def test_search_accepts_per_pool_policies():
+    model = small_model()
+    search = ApexSearch(model, h100_node(4))
+    reqs = get_trace("chat", arrival_rate=4.0, seed=0, num_requests=16)
+    res = search.search(reqs, feasible_only=True, disaggregated=True,
+                        max_disagg_plans=8,
+                        prefill_policy=BatchingPolicy(chunked_prefill=128))
+    assert res.best.feasible
+    assert any(r.plan_label.startswith("disagg[")
+               for r in res.all_reports)
+
+
+# ---------------------------------------------------------------------------
+# SearchResult.top() honors the search's SLO filters
+# ---------------------------------------------------------------------------
+
+def _mk_report(label, e2e, ttft, tput=0.0):
+    return SimulationReport(
+        plan_label=label, e2e_latency=e2e, total_energy=1.0,
+        ttft_mean=ttft, ttft_p95=ttft, tpot_mean=0, tpot_p95=0,
+        latency_p95=0, throughput_tok_s=tput, mfu=0, mbu=0, iterations=1,
+        preemptions=0, peak_kv_tokens=1, peak_batch=1, feasible=True)
+
+
+def test_top_applies_slo_filters():
+    fast_bad_ttft = _mk_report("fast-bad", e2e=1.0, ttft=9.0)
+    slow_good_ttft = _mk_report("slow-good", e2e=2.0, ttft=0.1)
+    res = SearchResult(best=slow_good_ttft, best_plan=None,
+                       all_reports=[fast_bad_ttft, slow_good_ttft],
+                       num_schemes=2, num_feasible=2, search_seconds=0.0,
+                       objective="latency", slo_ttft_s=1.0)
+    top = res.top(5)
+    # the SLO-violating plan the search rejected never surfaces
+    assert [r.plan_label for r in top] == ["slow-good"]
+    # without SLOs it would have ranked first
+    res_free = SearchResult(best=fast_bad_ttft, best_plan=None,
+                            all_reports=[fast_bad_ttft, slow_good_ttft],
+                            num_schemes=2, num_feasible=2,
+                            search_seconds=0.0, objective="latency")
+    assert res_free.top(1)[0].plan_label == "fast-bad"
+
+
+def test_throughput_objective_ranks_higher_tok_s_first():
+    lo = _mk_report("lo", e2e=1.0, ttft=0.1, tput=100.0)
+    hi = _mk_report("hi", e2e=2.0, ttft=0.1, tput=900.0)
+    key = OBJECTIVES["throughput"]
+    assert key(hi) < key(lo)
+    res = SearchResult(best=hi, best_plan=None, all_reports=[lo, hi],
+                       num_schemes=2, num_feasible=2, search_seconds=0.0,
+                       objective="throughput")
+    assert res.top(1)[0].plan_label == "hi"
+
+
+def test_search_throughput_objective_end_to_end():
+    model = small_model()
+    search = ApexSearch(model, h100_node(4))
+    reqs = get_trace("chat", arrival_rate=4.0, seed=0, num_requests=16)
+    res = search.search(reqs, objective="throughput", feasible_only=True)
+    feas = [r for r in res.all_reports if r.feasible]
+    assert res.best.throughput_tok_s == max(r.throughput_tok_s
+                                            for r in feas)
+
+
+# ---------------------------------------------------------------------------
+# shared metrics + drain-rate derivation
+# ---------------------------------------------------------------------------
+
+def test_percentile_and_p95():
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 0.95) == 95.0
+    assert p95(xs) == 95.0
+    assert percentile([], 0.5) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+    assert percentile(xs, 0.5) == 50.0
+
+
+def test_infeasible_report_canonical():
+    rep = SimulationReport.infeasible("nope")
+    assert not rep.feasible
+    assert rep.plan_label == "nope"
+    assert rep.e2e_latency == float("inf")
+    assert rep.total_energy == float("inf")
+    # ranked last by every minimizing objective
+    real = _mk_report("ok", e2e=1.0, ttft=0.1)
+    assert OBJECTIVES["latency"](rep) > OBJECTIVES["latency"](real)
+
+
+def test_derive_drain_rate():
+    assert derive_drain_rate(2048.0, 0.5, fallback=1.0) == pytest.approx(
+        4096.0)
+    assert derive_drain_rate(2048.0, 0.0, fallback=123.0) == 123.0
+    assert derive_drain_rate(0.0, 1.0, fallback=7.0) == 7.0
