@@ -31,12 +31,17 @@ def bench_search(search, reqs, **kw):
     t0 = time.perf_counter()
     res = search.search(reqs, **kw)
     dt = time.perf_counter() - t0
+    hit_rate = (res.cache_hits / (res.cache_hits + res.cache_misses)
+                if res.cache_hits + res.cache_misses else 0.0)
     return {
         "plans": res.num_schemes,
         "feasible": res.num_feasible,
         "seconds": round(dt, 3),
         "plans_per_sec": round(res.num_schemes / dt, 2),
         "best": res.best.plan_label,
+        "cache_hits": res.cache_hits,
+        "cache_misses": res.cache_misses,
+        "cache_hit_rate": round(hit_rate, 4),
     }
 
 
@@ -76,6 +81,9 @@ def main():
     for name, r in results.items():
         print(f"{name}: {r['plans']} plans in {r['seconds']}s "
               f"-> {r['plans_per_sec']} plans/s (best {r['best']})")
+        print(f"  step-cost cache: {r['cache_hits']} hits / "
+              f"{r['cache_misses']} misses "
+              f"({100 * r['cache_hit_rate']:.1f}% hit rate)")
     print(f"wrote {path}")
 
 

@@ -1,0 +1,183 @@
+"""Multi-fidelity search benchmark: surrogate screening throughput and
+end-to-end wall time on a 1000+-candidate joint search.
+
+Times three things and writes ``BENCH_search.json`` next to the repo
+root (the companion of ``BENCH_core.json``):
+
+  * surrogate plans/s — fluid-ODE screening rate over the full
+    candidate set (colocated + shared-cluster disagg + heterogeneous
+    pool-menu disagg),
+  * exact plans/s — event-engine rate on a spread sample of the same
+    candidates, giving the screening speedup ratio,
+  * multifid seconds — full ``MultiFidelitySearch.search`` wall time
+    (screen everything, exact-confirm the survivor frontier) for the
+    latency and throughput objectives.
+
+    PYTHONPATH=src python benchmarks/bench_search.py [--smoke] [--verify]
+                                                     [--jobs N] [--out PATH]
+
+``--smoke`` shrinks the workload for CI; ``--verify`` additionally runs
+the FULL exact search (minutes) and checks the exact winner survived the
+surrogate frontier for both objectives.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core import (ApexSearch, MultiFidelitySearch, get_trace,
+                        h100_node, h200_node, ir_from_hf_config)
+from repro.core.cluster import h100_multinode
+
+MODEL_CFG = dict(hidden_size=2048, num_hidden_layers=16,
+                 num_attention_heads=16, num_key_value_heads=8,
+                 intermediate_size=8192, vocab_size=32000)
+
+
+def build(smoke: bool):
+    model = ir_from_hf_config(MODEL_CFG, name="tiny-7b")
+    if smoke:
+        cluster = h100_node(8)
+        search_kw = dict(disaggregated=True, max_disagg_plans=12)
+        n_req = 16
+    else:
+        cluster = h100_multinode(2, 8)
+        search_kw = dict(
+            disaggregated=True, max_disagg_plans=1600,
+            pool_menu=[h100_node(8), h200_node(8),
+                       h100_node(4), h200_node(4)])
+        n_req = 56
+    search = ApexSearch(model, cluster)
+    # loaded trace: at light load most plans tie at the arrival span and
+    # the tie-aware frontier (correctly) refuses to prune — the bench
+    # regime is the one where the surrogate has ranking signal
+    reqs = get_trace("chat", arrival_rate=32.0, seed=0,
+                     num_requests=n_req)
+    return search, reqs, search_kw
+
+
+def bench_rates(search, reqs, search_kw, exact_sample: int):
+    """Surrogate plans/s over ALL candidates vs exact plans/s on a
+    spread sample (the full exact sweep is what multifid avoids)."""
+    from repro.core.fluid import TraceSummary
+    cands, kv = search.candidates(**search_kw)
+    ts = TraceSummary.of(reqs)
+    t0 = time.perf_counter()
+    for c in cands:
+        _, sim = search.make_simulator(c, kv, fluid=True)
+        sim.simulate(reqs, summary=ts)
+    t_screen = time.perf_counter() - t0
+    sur_pps = len(cands) / t_screen
+
+    idx = list(range(0, len(cands), max(1, len(cands) // exact_sample)))
+    idx = idx[:exact_sample]
+    t0 = time.perf_counter()
+    for i in idx:
+        _, sim = search.make_simulator(cands[i], kv)
+        sim.simulate(reqs)
+    t_exact = time.perf_counter() - t0
+    exact_pps = len(idx) / t_exact
+    return {
+        "num_candidates": len(cands),
+        "surrogate_seconds": round(t_screen, 3),
+        "surrogate_plans_per_sec": round(sur_pps, 1),
+        "exact_sample": len(idx),
+        "exact_plans_per_sec": round(exact_pps, 2),
+        "speedup_ratio": round(sur_pps / exact_pps, 1),
+    }
+
+
+def bench_multifid(search, reqs, search_kw, objective: str, jobs: int):
+    mf = MultiFidelitySearch(search)
+    t0 = time.perf_counter()
+    res = mf.search(reqs, objective=objective, jobs=jobs, **search_kw)
+    dt = time.perf_counter() - t0
+    return res, {
+        "objective": objective,
+        "num_candidates": res.num_candidates,
+        "num_survivors": res.num_survivors,
+        "screen_seconds": round(res.screen_seconds, 3),
+        "confirm_seconds": round(res.confirm_seconds, 3),
+        "total_seconds": round(dt, 3),
+        "best": res.best.plan_label,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizing for CI (seconds, not minutes)")
+    ap.add_argument("--verify", action="store_true",
+                    help="also run the full exact search and check the "
+                         "exact winner survived the surrogate frontier")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="forked workers for exact confirmation")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+
+    search, reqs, search_kw = build(args.smoke)
+    rates = bench_rates(search, reqs, search_kw,
+                        exact_sample=4 if args.smoke else 8)
+    searches = {}
+    mf_results = {}
+    for objective in ("latency", "throughput"):
+        res, row = bench_multifid(search, reqs, search_kw, objective,
+                                  args.jobs)
+        searches[objective] = row
+        mf_results[objective] = res
+
+    verify = None
+    if args.verify:
+        verify = {}
+        for objective in ("latency", "throughput"):
+            exact = search.search(reqs, objective=objective,
+                                  jobs=args.jobs, **search_kw)
+            mres = mf_results[objective]
+            survived = {mres.surrogate_reports[i].plan_label
+                        for i in mres.survivor_indices}
+            verify[objective] = {
+                "exact_best": exact.best.plan_label,
+                "exact_seconds": round(exact.search_seconds, 3),
+                "winner_survived": exact.best.plan_label in survived,
+            }
+
+    out = {
+        "bench": "bench_search",
+        "smoke": args.smoke,
+        "jobs": args.jobs,
+        "n_requests": len(reqs),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "rates": rates,
+        "multifid": searches,
+        "verify": verify,
+    }
+    path = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_search.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+    r = rates
+    print(f"candidates: {r['num_candidates']}")
+    print(f"surrogate: {r['surrogate_plans_per_sec']} plans/s, "
+          f"exact: {r['exact_plans_per_sec']} plans/s "
+          f"-> {r['speedup_ratio']}x")
+    for objective, row in searches.items():
+        print(f"multifid[{objective}]: {row['num_candidates']} -> "
+              f"{row['num_survivors']} survivors in "
+              f"{row['total_seconds']}s (best {row['best']})")
+    if verify:
+        for objective, v in verify.items():
+            print(f"verify[{objective}]: exact best in "
+                  f"{v['exact_seconds']}s, survived="
+                  f"{v['winner_survived']}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

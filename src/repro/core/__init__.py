@@ -17,8 +17,10 @@ from .planner import (ParallelScheme, divisors, generate_schemes,
                       heuristic_scheme, prefilter_schemes)
 from .profiles import AnalyticBackend, CollectiveModel, MeasuredBackend, \
     ProfileBackend, ProfileStore
+from .fluid import FluidDisaggSimulator, FluidSimulator, TraceSummary
+from .multifid import MultiFidelityResult, MultiFidelitySearch
 from .quant import FORMATS, QuantFormat, get_format, register_format
-from .search import ApexSearch, SearchResult, compare_three_plans
+from .search import ApexSearch, SearchResult, compare_three_plans, fork_map
 from .simulator import PlanSimulator, SimulationReport
 from .templates import CellScheme, CollectiveCall, reshard_collectives, \
     schemes_for_cell
@@ -30,9 +32,10 @@ __all__ = [
     "BatchingPolicy", "BatchingResult", "Block", "Cell", "CellScheme",
     "CLUSTER_PRESETS", "Cluster", "CollectiveCall", "CollectiveModel",
     "ContinuousScheduler", "CrossAttentionCell", "DeviceSpec", "Engine",
-    "ExecutionPlan", "FORMATS",
+    "ExecutionPlan", "FORMATS", "FluidDisaggSimulator", "FluidSimulator",
     "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
-    "NetworkLevel", "OpCall", "cpu_local",
+    "MultiFidelityResult", "MultiFidelitySearch",
+    "NetworkLevel", "OpCall", "TraceSummary", "cpu_local", "fork_map",
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
     "QuantFormat", "Request", "SSMCell", "SchedulerPolicy", "SearchResult",
     "SharedLink", "SimulationReport", "StaticScheduler", "StepCostCache",

@@ -72,6 +72,16 @@ class StepCostCache:
         self.hits = 0
         self.misses = 0
 
+    def stats(self) -> Dict[str, int]:
+        """Hit/miss counters for cost-reuse observability (reported by
+        the search as per-plan aggregates and by bench_core.py)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self.table)}
+
+    def reset_stats(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
     def cost(self, w: Workload) -> tuple:
         """(time_s, energy_j, (flops_inc, bytes_inc)) for one iteration."""
         key = w.signature()

@@ -1,0 +1,245 @@
+"""Multi-fidelity plan search: fluid screening, exact confirmation.
+
+Plan search cost is dominated by exact trace simulation — tens of
+milliseconds per candidate — while the fluid surrogate (core/fluid.py)
+scores a candidate in a few hundred microseconds from the same cost
+models.  ``MultiFidelitySearch`` exploits the gap with the classic
+screen-then-confirm loop:
+
+  1. SCREEN every candidate ``ApexSearch.candidates()`` enumerates with
+     the fluid surrogate (one shared ``TraceSummary``, computed once),
+  2. keep a SURVIVOR FRONTIER: the top ``frontier_k`` surrogate
+     candidates under EVERY objective in ``OBJECTIVES`` (not just the
+     requested one — the surrogate's ranking noise is objective-
+     dependent, so a multi-objective frontier hedges against it), plus
+     the top ``frontier_k`` under the requested objective among
+     candidates whose surrogate means fit a ``slo_slack``-widened SLO
+     band (candidates the surrogate thinks are near-feasible survive
+     even if their surrogate objective is middling),
+  3. CONFIRM only the survivors with the exact event engine — serially
+     or across ``jobs`` forked workers — and rank them exactly as
+     ``ApexSearch.search`` would have.
+
+With a ~1000-candidate joint search this turns a many-minute exact
+sweep into roughly a second of screening plus a handful of exact
+simulations, while the frontier (default width 8 per objective) is wide
+enough that the exact search's winner survives screening (tested in
+tests/test_fluid.py across seeded model/trace points).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, List, Optional, Sequence
+
+from .batching import BatchingPolicy
+from .cluster import Cluster
+from .fluid import TraceSummary
+from .metrics import SimulationReport
+from .search import (OBJECTIVES, ApexSearch, SearchResult, _call_progress,
+                     fork_map)
+from .trace import Request
+
+
+@dataclasses.dataclass
+class MultiFidelityResult:
+    """A ``SearchResult`` over the confirmed survivors, plus the
+    screening telemetry that justifies trusting it."""
+
+    result: SearchResult               # exact ranking over survivors
+    num_candidates: int                # size of the full candidate set
+    num_survivors: int                 # candidates exact-confirmed
+    screen_seconds: float              # fluid sweep wall time
+    confirm_seconds: float             # exact confirmation wall time
+    surrogate_reports: List[SimulationReport]   # fluid report per candidate
+    survivor_indices: List[int]        # into the candidate/surrogate lists
+
+    @property
+    def best(self) -> SimulationReport:
+        return self.result.best
+
+    @property
+    def best_plan(self):
+        return self.result.best_plan
+
+    @property
+    def surrogate_plans_per_sec(self) -> float:
+        if self.screen_seconds <= 0:
+            return float("inf")
+        return self.num_candidates / self.screen_seconds
+
+
+class MultiFidelitySearch:
+    """Layered on an ``ApexSearch``: same candidate set, same objectives,
+    same exact simulators for the final ranking — only the sweep over
+    non-survivors is replaced by the fluid surrogate."""
+
+    def __init__(self, search: ApexSearch, frontier_k: int = 8,
+                 slo_slack: float = 1.5,
+                 screen_objectives: Optional[Sequence[str]] = None,
+                 tie_rel: float = 5e-3):
+        self.inner = search
+        self.frontier_k = frontier_k
+        self.slo_slack = slo_slack
+        self.tie_rel = tie_rel
+        self.screen_objectives = list(screen_objectives or OBJECTIVES)
+        unknown = [o for o in self.screen_objectives if o not in OBJECTIVES]
+        if unknown:
+            raise KeyError(f"unknown screening objectives {unknown}; "
+                           f"known: {sorted(OBJECTIVES)}")
+
+    # -- survivor selection ---------------------------------------------------
+
+    def _topk_with_ties(self, feas: List[int],
+                        reports: List[SimulationReport], key) -> List[int]:
+        """Top ``frontier_k`` of ``feas`` under ``key``, EXPANDED to every
+        candidate within ``tie_rel`` of the k-th value: when the surrogate
+        cannot distinguish plans (e.g. span-dominated latency at light
+        load, where dozens tie to the arrival window), cutting the tie
+        block at k would drop candidates on index order — an arbitrary
+        choice the exact engine, not the surrogate, should make."""
+        ranked = sorted(feas, key=lambda i: key(reports[i]))
+        if len(ranked) <= self.frontier_k:
+            return ranked
+        kth = key(reports[ranked[self.frontier_k - 1]])
+        thr = kth + self.tie_rel * abs(kth)
+        return [i for i in ranked if key(reports[i]) <= thr]
+
+    def _frontier(self, reports: List[SimulationReport], objective: str,
+                  slo_ttft_s: Optional[float],
+                  slo_tpot_s: Optional[float]) -> List[int]:
+        feas = [i for i, r in enumerate(reports) if r.feasible]
+        if not feas:
+            return []
+        keep: set = set()
+        for name in self.screen_objectives:
+            keep.update(self._topk_with_ties(feas, reports,
+                                             OBJECTIVES[name]))
+        # near-SLO band under the requested objective: surrogate MEANS
+        # within slack x SLO (means, not p95 — the surrogate's percentiles
+        # are dispersion-scaled means, so the band uses the sturdier
+        # statistic and the slack absorbs the dispersion)
+        if slo_ttft_s is not None or slo_tpot_s is not None:
+            def in_band(i: int) -> bool:
+                r = reports[i]
+                if slo_ttft_s is not None and \
+                        r.ttft_mean > slo_ttft_s * self.slo_slack:
+                    return False
+                if slo_tpot_s is not None and \
+                        r.tpot_mean > slo_tpot_s * self.slo_slack:
+                    return False
+                return True
+            band = [i for i in feas if in_band(i)]
+            if band:
+                keep.update(self._topk_with_ties(band, reports,
+                                                 OBJECTIVES[objective]))
+        return sorted(keep)
+
+    # -- the search -----------------------------------------------------------
+
+    def search(self, requests: Sequence[Request],
+               objective: str = "latency",
+               quant: str = "fp16",
+               feasible_only: bool = False,
+               policy: Optional[BatchingPolicy] = None,
+               max_model_dp: Optional[int] = None,
+               slo_ttft_s: Optional[float] = None,
+               slo_tpot_s: Optional[float] = None,
+               disaggregated: bool = False,
+               transfer_mode: str = "layerwise",
+               decode_quant: Optional[str] = None,
+               max_disagg_plans: int = 256,
+               pool_menu: Optional[Sequence[Cluster]] = None,
+               max_total_devices: Optional[int] = None,
+               prefill_policy: Optional[BatchingPolicy] = None,
+               decode_policy: Optional[BatchingPolicy] = None,
+               progress: Optional[Callable] = None,
+               verbose: bool = False,
+               jobs: int = 1) -> MultiFidelityResult:
+        """Same signature semantics as ``ApexSearch.search``; returns a
+        ``MultiFidelityResult`` whose ``result`` ranks only the confirmed
+        survivors (``result.all_reports`` holds one EXACT report per
+        survivor, in survivor order)."""
+        obj = OBJECTIVES[objective]
+        inner = self.inner
+        candidates, kv_model = inner.candidates(
+            quant=quant, feasible_only=feasible_only,
+            max_model_dp=max_model_dp, disaggregated=disaggregated,
+            transfer_mode=transfer_mode, decode_quant=decode_quant,
+            max_disagg_plans=max_disagg_plans, pool_menu=pool_menu,
+            max_total_devices=max_total_devices)
+        n_cand = len(candidates)
+        ts = TraceSummary.of(requests)
+
+        # ---- phase 1: fluid screening (cheap enough to stay serial) ----
+        t0 = _time.perf_counter()
+        surrogate: List[SimulationReport] = []
+        for i, cand in enumerate(candidates):
+            family = cand[0]
+            _, sim = inner.make_simulator(cand, kv_model, fluid=True)
+            sim_kwargs = {} if family == "colocated" else {
+                "prefill_policy": prefill_policy,
+                "decode_policy": decode_policy}
+            surrogate.append(sim.simulate(requests, policy=policy,
+                                          summary=ts, **sim_kwargs))
+            if verbose and (i + 1) % max(1, n_cand // 10) == 0:
+                print(f"[screen] {i + 1}/{n_cand} surrogate-scored")
+        screen_s = _time.perf_counter() - t0
+
+        survivors = self._frontier(surrogate, objective,
+                                   slo_ttft_s, slo_tpot_s)
+        if not survivors:
+            # surrogate found nothing feasible — fall back to confirming
+            # every candidate rather than failing on surrogate pessimism
+            survivors = list(range(n_cand))
+        if verbose:
+            print(f"[screen] {n_cand} candidates -> "
+                  f"{len(survivors)} survivors "
+                  f"({screen_s:.2f}s, "
+                  f"{n_cand / screen_s if screen_s > 0 else 0:.0f} plans/s)")
+
+        # ---- phase 2: exact confirmation of the survivors ----
+        t1 = _time.perf_counter()
+
+        def eval_one(j: int):
+            cand = candidates[survivors[j]]
+            _, sim = inner.make_simulator(cand, kv_model)
+            sim_kwargs = {} if cand[0] == "colocated" else {
+                "prefill_policy": prefill_policy,
+                "decode_policy": decode_policy}
+            rep = sim.simulate(requests, policy=policy, **sim_kwargs)
+            st = getattr(sim, "cache_stats", None) or {}
+            return rep, st.get("hits", 0), st.get("misses", 0)
+
+        def confirm_progress(done, total, best):
+            if progress:
+                _call_progress(progress, done, total, best)
+            if verbose and (done == total or done % max(1, total // 5) == 0):
+                lbl = best.plan_label if best is not None else "<none>"
+                print(f"[confirm] {done}/{total} exact, best={lbl}")
+
+        reports, best_j, hits, misses = inner._evaluate_ranked(
+            eval_one, len(survivors), obj, slo_ttft_s, slo_tpot_s,
+            jobs=jobs, progress=confirm_progress, tag="confirm")
+        confirm_s = _time.perf_counter() - t1
+        if best_j is None:
+            raise RuntimeError(
+                "no feasible plan found (memory or SLO constraints too "
+                f"tight) among {len(survivors)} survivors of "
+                f"{n_cand} candidates")
+        best_plan, _ = inner.make_simulator(candidates[survivors[best_j]],
+                                            kv_model)
+        result = SearchResult(
+            best=reports[best_j], best_plan=best_plan,
+            all_reports=reports, num_schemes=n_cand,
+            num_feasible=sum(r.feasible for r in reports),
+            search_seconds=screen_s + confirm_s,
+            objective=objective,
+            slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
+            cache_hits=hits, cache_misses=misses)
+        return MultiFidelityResult(
+            result=result, num_candidates=n_cand,
+            num_survivors=len(survivors),
+            screen_seconds=screen_s, confirm_seconds=confirm_s,
+            surrogate_reports=surrogate, survivor_indices=survivors)

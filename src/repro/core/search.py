@@ -12,13 +12,22 @@ Given (model IR, cluster, request trace):
 Also provides the paper's three comparison points (§4.2): the heuristic
 baseline plan, the Feasible Optimal (no cell-level DP / heterogeneous
 sharding), and the unconstrained APEX Optimal.
+
+Candidate enumeration and simulator construction are factored out of the
+search loop (``candidates()`` / ``make_simulator()``) so the exact path
+here and the fluid-surrogate screening path (core/multifid.py) evaluate
+the SAME candidate set through either fidelity.  ``search(jobs=N)``
+fans the per-plan simulations out across forked worker processes —
+plans are independent and every evaluation is a pure function of
+(plan, requests), so the parallel reports are identical to serial.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time as _time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .batching import BatchingPolicy
 from .cluster import Cluster
@@ -42,6 +51,77 @@ OBJECTIVES = {
     "throughput": lambda r: -r.throughput_tok_s,   # maximize tok/s
 }
 
+# A candidate plan before simulation: family is "colocated" | "disagg",
+# pools is None (shared cluster) or a (prefill_cluster, decode_cluster)
+# pair from a heterogeneous pool menu.
+Candidate = Tuple[str, object, Optional[tuple]]
+
+
+# ---------------------------------------------------------------------------
+# forked parallel evaluation
+# ---------------------------------------------------------------------------
+
+# The work closure is stashed module-level and inherited by forked
+# workers (copy-on-write), so nothing but an index crosses the pipe on
+# the way in and a picklable report on the way out.
+_FORK_WORK: dict = {"fn": None}
+
+
+def _fork_call(i: int):
+    return _FORK_WORK["fn"](i)
+
+
+def fork_map(fn: Callable[[int], object], n: int, jobs: int,
+             progress: Optional[Callable[[int], None]] = None) -> list:
+    """``[fn(i) for i in range(n)]`` across ``jobs`` forked processes.
+
+    Falls back to the serial loop when ``jobs <= 1``, there is nothing
+    to parallelize, or the platform has no fork (the only start method
+    that inherits the closure without pickling it).  Results come back
+    in index order, so callers see exactly the serial sequence.
+    """
+    if jobs <= 1 or n <= 1:
+        out = []
+        for i in range(n):
+            out.append(fn(i))
+            if progress:
+                progress(i + 1)
+        return out
+    import multiprocessing as mp
+    try:
+        ctx = mp.get_context("fork")
+    except ValueError:
+        out = []
+        for i in range(n):
+            out.append(fn(i))
+            if progress:
+                progress(i + 1)
+        return out
+    _FORK_WORK["fn"] = fn
+    try:
+        with ctx.Pool(min(jobs, n)) as pool:
+            out = []
+            for i, res in enumerate(pool.imap(_fork_call, range(n))):
+                out.append(res)
+                if progress:
+                    progress(i + 1)
+            return out
+    finally:
+        _FORK_WORK["fn"] = None
+
+
+def _call_progress(progress, done: int, total: int, best) -> None:
+    """Invoke a progress callback with (done, total) or, when it accepts
+    a third parameter, (done, total, current_best_report)."""
+    try:
+        n_params = len(inspect.signature(progress).parameters)
+    except (TypeError, ValueError):
+        n_params = 2
+    if n_params >= 3:
+        progress(done, total, best)
+    else:
+        progress(done, total)
+
 
 @dataclasses.dataclass
 class SearchResult:
@@ -54,6 +134,8 @@ class SearchResult:
     objective: str = "latency"     # what the search ranked by
     slo_ttft_s: Optional[float] = None   # the SLO filters the search used
     slo_tpot_s: Optional[float] = None
+    cache_hits: int = 0            # summed StepCostCache counters across
+    cache_misses: int = 0          # every simulated candidate
 
     def admissible(self, r: SimulationReport) -> bool:
         """Feasible AND within the search's own SLO filters — the same
@@ -121,53 +203,25 @@ class ApexSearch:
                                   cluster=self.cluster, quant=quant)
         return self.evaluate(scheme, requests, policy=policy)
 
-    # -- full search --------------------------------------------------------------
+    # -- candidate enumeration (shared by exact and surrogate search) ----------
 
-    def search(self, requests: Sequence[Request],
-               objective: str = "latency",
-               quant: str = "fp16",
-               feasible_only: bool = False,
-               policy: Optional[BatchingPolicy] = None,
-               max_model_dp: Optional[int] = None,
-               slo_ttft_s: Optional[float] = None,
-               slo_tpot_s: Optional[float] = None,
-               disaggregated: bool = False,
-               transfer_mode: str = "layerwise",
-               decode_quant: Optional[str] = None,
-               max_disagg_plans: int = 256,
-               pool_menu: Optional[Sequence[Cluster]] = None,
-               max_total_devices: Optional[int] = None,
-               prefill_policy: Optional[BatchingPolicy] = None,
-               decode_policy: Optional[BatchingPolicy] = None,
-               progress: Optional[Callable[[int, int], None]] = None
-               ) -> SearchResult:
-        """Rank plans under ``objective``; with ``disaggregated=True`` the
-        candidate set is the union of colocated schemes and two-pool
-        disaggregated schemes (disagg/), scored by the same simulator
-        metrics so one objective ranks both families jointly.
+    def candidates(self, quant: str = "fp16",
+                   feasible_only: bool = False,
+                   max_model_dp: Optional[int] = None,
+                   disaggregated: bool = False,
+                   transfer_mode: str = "layerwise",
+                   decode_quant: Optional[str] = None,
+                   max_disagg_plans: int = 256,
+                   pool_menu: Optional[Sequence[Cluster]] = None,
+                   max_total_devices: Optional[int] = None
+                   ) -> Tuple[List[Candidate], object]:
+        """Enumerate the candidate set one search call would simulate.
 
-        ``pool_menu`` adds HETEROGENEOUS disaggregated candidates: every
-        ordered (prefill_cluster, decode_cluster) pair from the menu whose
-        combined device count fits ``max_total_devices`` (default: this
-        search's cluster size) is enumerated — e.g. a menu of
-        ``[h100_node(8), h200_node(8)]`` tries H100-prefill/H200-decode and
-        every other assignment (including same-device pairs — two separate
-        islands joined by a cross-pool link are a different deployment
-        from splitting one shared cluster, and are labeled with their pool
-        devices to stay distinguishable).  Each pool is costed on its own
-        cluster's analytic model; the KV handoff crosses the pair's
-        cross-pool link.  ``max_disagg_plans`` caps each disagg family
-        separately (the shared-cluster splits, and the menu pairs jointly)
-        — with a menu, up to ~2x that many disagg candidates simulate.
-
-        ``prefill_policy``/``decode_policy`` drive the two pools of every
-        disaggregated candidate with their own batching policies (e.g.
-        chunked prefill only on the prefill pool, a different
-        max_batch_size per pool), defaulting to the shared ``policy``;
-        colocated candidates always use ``policy``.
+        Returns ``(candidates, kv_model)`` where each candidate is
+        ``(family, scheme, pools)`` — see ``make_simulator`` — and
+        ``kv_model`` is the shared-cluster KV-transfer model (None for a
+        colocated-only search).
         """
-        t0 = _time.perf_counter()
-        obj = OBJECTIVES[objective]
         schemes = generate_schemes(self.model, self.cluster.num_devices,
                                    quant=quant,
                                    allow_cell_dp=not feasible_only,
@@ -179,12 +233,11 @@ class ApexSearch:
         schemes = prefilter_schemes(schemes,
                                     self.cluster.device.hbm_bytes)
 
-        candidates: List[tuple] = [("colocated", s, None) for s in schemes]
+        candidates: List[Candidate] = [("colocated", s, None)
+                                       for s in schemes]
         kv_model = None
         if disaggregated:
-            from ..disagg import (DisaggSimulator, KVTransferModel,
-                                  generate_disagg_schemes,
-                                  map_disagg_scheme)
+            from ..disagg import (KVTransferModel, generate_disagg_schemes)
             dschemes = generate_disagg_schemes(
                 self.model, self.cluster, quant=quant,
                 decode_quant=decode_quant,
@@ -210,53 +263,185 @@ class ApexSearch:
                         prefill_cluster=pre_c, decode_cluster=dec_c)
                     candidates += [("disagg", s, (pre_c, dec_c))
                                    for s in hschemes]
+        return candidates, kv_model
 
-        reports: List[SimulationReport] = []
-        best: Optional[SimulationReport] = None
-        best_plan = None
-        for i, (family, scheme, pools) in enumerate(candidates):
+    def make_simulator(self, candidate: Candidate, kv_model=None,
+                       fluid: bool = False):
+        """(plan, simulator) for one candidate, at either fidelity.
+
+        ``fluid=True`` builds the fluid-ODE surrogate (core/fluid.py)
+        from the same cost models the exact simulator would use, so the
+        two fidelities disagree only on dynamics, never on step costs.
+        """
+        family, scheme, pools = candidate
+        if family == "colocated":
+            plan = map_scheme(scheme, self.cluster)
+            if fluid:
+                from .fluid import FluidSimulator
+                return plan, FluidSimulator(plan, self.store, self.coll)
+            return plan, PlanSimulator(plan, self.store, self.coll)
+        from ..disagg import DisaggSimulator, map_disagg_scheme
+        if fluid:
+            from .fluid import FluidDisaggSimulator
+            sim_cls = FluidDisaggSimulator
+        else:
+            sim_cls = DisaggSimulator
+        if pools is None:
+            plan = map_disagg_scheme(scheme, self.cluster)
+            return plan, sim_cls(plan, self.store, self.coll, kv_model)
+        pre_c, dec_c = pools
+        plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
+                                 decode_cluster=dec_c)
+        pre_store, pre_coll = self._pool_cost_models(pre_c)
+        dec_store, dec_coll = self._pool_cost_models(dec_c)
+        return plan, sim_cls(plan, pre_store, pre_coll,
+                             decode_store=dec_store, decode_coll=dec_coll)
+
+    # -- full search --------------------------------------------------------------
+
+    def search(self, requests: Sequence[Request],
+               objective: str = "latency",
+               quant: str = "fp16",
+               feasible_only: bool = False,
+               policy: Optional[BatchingPolicy] = None,
+               max_model_dp: Optional[int] = None,
+               slo_ttft_s: Optional[float] = None,
+               slo_tpot_s: Optional[float] = None,
+               disaggregated: bool = False,
+               transfer_mode: str = "layerwise",
+               decode_quant: Optional[str] = None,
+               max_disagg_plans: int = 256,
+               pool_menu: Optional[Sequence[Cluster]] = None,
+               max_total_devices: Optional[int] = None,
+               prefill_policy: Optional[BatchingPolicy] = None,
+               decode_policy: Optional[BatchingPolicy] = None,
+               progress: Optional[Callable] = None,
+               verbose: bool = False,
+               jobs: int = 1) -> SearchResult:
+        """Rank plans under ``objective``; with ``disaggregated=True`` the
+        candidate set is the union of colocated schemes and two-pool
+        disaggregated schemes (disagg/), scored by the same simulator
+        metrics so one objective ranks both families jointly.
+
+        ``pool_menu`` adds HETEROGENEOUS disaggregated candidates: every
+        ordered (prefill_cluster, decode_cluster) pair from the menu whose
+        combined device count fits ``max_total_devices`` (default: this
+        search's cluster size) is enumerated — e.g. a menu of
+        ``[h100_node(8), h200_node(8)]`` tries H100-prefill/H200-decode and
+        every other assignment (including same-device pairs — two separate
+        islands joined by a cross-pool link are a different deployment
+        from splitting one shared cluster, and are labeled with their pool
+        devices to stay distinguishable).  Each pool is costed on its own
+        cluster's analytic model; the KV handoff crosses the pair's
+        cross-pool link.  ``max_disagg_plans`` caps each disagg family
+        separately (the shared-cluster splits, and the menu pairs jointly)
+        — with a menu, up to ~2x that many disagg candidates simulate.
+
+        ``prefill_policy``/``decode_policy`` drive the two pools of every
+        disaggregated candidate with their own batching policies (e.g.
+        chunked prefill only on the prefill pool, a different
+        max_batch_size per pool), defaulting to the shared ``policy``;
+        colocated candidates always use ``policy``.
+
+        Long searches need not run silently: ``progress(done, total)`` —
+        or ``progress(done, total, best_report)`` if the callback takes a
+        third parameter — fires after every candidate, and
+        ``verbose=True`` prints periodic candidates-evaluated /
+        current-best lines.
+
+        ``jobs=N`` evaluates candidates across N forked processes.  Plans
+        are independent and each simulation is a pure function of
+        (plan, requests), so the reports — and therefore the ranking —
+        are identical to a serial run.
+        """
+        t0 = _time.perf_counter()
+        obj = OBJECTIVES[objective]
+        candidates, kv_model = self.candidates(
+            quant=quant, feasible_only=feasible_only,
+            max_model_dp=max_model_dp, disaggregated=disaggregated,
+            transfer_mode=transfer_mode, decode_quant=decode_quant,
+            max_disagg_plans=max_disagg_plans, pool_menu=pool_menu,
+            max_total_devices=max_total_devices)
+
+        def eval_one(i: int):
+            family = candidates[i][0]
+            _, sim = self.make_simulator(candidates[i], kv_model)
             sim_kwargs = {} if family == "colocated" else {
                 "prefill_policy": prefill_policy,
                 "decode_policy": decode_policy}
-            if family == "colocated":
-                plan = map_scheme(scheme, self.cluster)
-                sim = PlanSimulator(plan, self.store, self.coll)
-            elif pools is None:
-                plan = map_disagg_scheme(scheme, self.cluster)
-                sim = DisaggSimulator(plan, self.store, self.coll,
-                                      kv_model)
-            else:
-                pre_c, dec_c = pools
-                plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
-                                         decode_cluster=dec_c)
-                pre_store, pre_coll = self._pool_cost_models(pre_c)
-                dec_store, dec_coll = self._pool_cost_models(dec_c)
-                sim = DisaggSimulator(plan, pre_store, pre_coll,
-                                      decode_store=dec_store,
-                                      decode_coll=dec_coll)
             rep = sim.simulate(requests, policy=policy, **sim_kwargs)
-            reports.append(rep)
-            if progress:
-                progress(i + 1, len(candidates))
-            if not rep.feasible:
-                continue
-            if slo_ttft_s is not None and rep.ttft_p95 > slo_ttft_s:
-                continue
-            if slo_tpot_s is not None and rep.tpot_p95 > slo_tpot_s:
-                continue
-            if best is None or obj(rep) < obj(best):
-                best, best_plan = rep, plan
-        if best is None:
+            st = getattr(sim, "cache_stats", None) or {}
+            return rep, st.get("hits", 0), st.get("misses", 0)
+
+        reports, best_idx, hits, misses = self._evaluate_ranked(
+            eval_one, len(candidates), obj, slo_ttft_s, slo_tpot_s,
+            jobs=jobs, progress=progress, verbose=verbose,
+            tag="search")
+        if best_idx is None:
             raise RuntimeError(
                 "no feasible plan found (memory or SLO constraints too "
                 f"tight) among {len(candidates)} schemes")
-        return SearchResult(best=best, best_plan=best_plan,
+        best_plan, _ = self.make_simulator(candidates[best_idx], kv_model)
+        return SearchResult(best=reports[best_idx], best_plan=best_plan,
                             all_reports=reports,
                             num_schemes=len(candidates),
                             num_feasible=sum(r.feasible for r in reports),
                             search_seconds=_time.perf_counter() - t0,
                             objective=objective,
-                            slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s)
+                            slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
+                            cache_hits=hits, cache_misses=misses)
+
+    def _evaluate_ranked(self, eval_one: Callable[[int], tuple], n: int,
+                         obj: Objective,
+                         slo_ttft_s: Optional[float],
+                         slo_tpot_s: Optional[float],
+                         jobs: int = 1,
+                         progress: Optional[Callable] = None,
+                         verbose: bool = False,
+                         tag: str = "search"):
+        """Run ``eval_one`` over ``range(n)`` (serial or forked), track
+        the SLO-filtered objective winner, and aggregate cache counters.
+        Returns (reports, best_idx, cache_hits, cache_misses)."""
+        state = {"best": None, "best_idx": None, "done": 0}
+        results: List[tuple] = []
+        every = max(1, n // 20)
+
+        def admit(rep) -> bool:
+            if not rep.feasible:
+                return False
+            if slo_ttft_s is not None and rep.ttft_p95 > slo_ttft_s:
+                return False
+            if slo_tpot_s is not None and rep.tpot_p95 > slo_tpot_s:
+                return False
+            return True
+
+        def on_result(i: int, rep) -> None:
+            if admit(rep) and (state["best"] is None
+                               or obj(rep) < obj(state["best"])):
+                state["best"] = rep
+                state["best_idx"] = i
+            state["done"] += 1
+            if progress:
+                _call_progress(progress, state["done"], n, state["best"])
+            if verbose and (state["done"] % every == 0
+                            or state["done"] == n):
+                b = state["best"]
+                cur = (f"best={b.plan_label} obj={obj(b):.4g}"
+                       if b is not None else "best=<none feasible>")
+                print(f"[{tag}] {state['done']}/{n} evaluated, {cur}")
+
+        def run(i: int):
+            res = eval_one(i)
+            return res
+
+        ordered = fork_map(run, n, jobs)
+        for i, res in enumerate(ordered):
+            results.append(res)
+            on_result(i, res[0])
+        reports = [r for r, _, _ in results]
+        hits = sum(h for _, h, _ in results)
+        misses = sum(m for _, _, m in results)
+        return reports, state["best_idx"], hits, misses
 
 
 def compare_three_plans(model: ModelIR, cluster: Cluster,

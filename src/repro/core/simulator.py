@@ -57,6 +57,8 @@ class PlanSimulator:
         self._flops_accum = 0.0
         self._bytes_accum = 0.0
         self._last_inc = (0.0, 0.0)   # per-call accumulator increment
+        # last simulate()'s StepCostCache counters (cost-reuse telemetry)
+        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0}
         # distinct attention windows in the model (for Workload building)
         self.windows = sorted(
             {getattr(c, "window", None) for c in self.scheme.model.block.cells},
@@ -189,13 +191,14 @@ class PlanSimulator:
             buckets[i % scheme.model_dp].append(r)
 
         engine = Engine()
+        cache = StepCostCache(self.iteration_cost, owner=self)
         pool = engine.add_pool(
-            "serve", buckets, cap, policy,
-            StepCostCache(self.iteration_cost, owner=self),
+            "serve", buckets, cap, policy, cache,
             windows=self.windows,
             is_encdec=scheme.model.encoder is not None)
         engine.run()
         results = pool.results()
+        self.cache_stats = cache.stats()
 
         # replay the memoized cost calls into the utilization accumulators
         # in replica order (the legacy sequential summation order)

@@ -57,12 +57,40 @@ def _lognormal_params(mean: float, std: float) -> tuple:
     return mu, math.sqrt(sigma2)
 
 
+class _GeneratorDraws:
+    """Adapts a ``numpy.random.Generator`` to the two draw methods the
+    synthesizer uses, so parallel search workers can regenerate
+    byte-identical traces: ``numpy.random.default_rng(seed)`` is a
+    deterministic function of the seed in every process, with none of
+    the cross-process state a shared module-level RNG would have."""
+
+    def __init__(self, gen):
+        self.gen = gen
+
+    def expovariate(self, rate: float) -> float:
+        return float(self.gen.exponential(1.0 / rate))
+
+    def lognormvariate(self, mu: float, sigma: float) -> float:
+        return float(self.gen.lognormal(mu, sigma))
+
+
 def synthesize_trace(spec: TraceSpec, arrival_rate: float,
                      seed: int = 0, num_requests: Optional[int] = None,
-                     max_len: int = 131072, source_len: int = 0
-                     ) -> List[Request]:
-    """Poisson arrivals at ``arrival_rate`` req/s, log-normal lengths."""
-    rng = random.Random(seed)
+                     max_len: int = 131072, source_len: int = 0,
+                     rng=None) -> List[Request]:
+    """Poisson arrivals at ``arrival_rate`` req/s, log-normal lengths.
+
+    ``rng`` overrides the default seeded ``random.Random``: pass either a
+    ``random.Random`` or an explicit ``numpy.random.Generator`` (adapted
+    transparently).  Two calls with equal-state generators produce
+    byte-identical traces — the determinism contract parallel search
+    workers (``jobs=N``) rely on when each regenerates its own copy.
+    The default path is unchanged (same draws as before).
+    """
+    if rng is None:
+        rng = random.Random(seed)
+    elif not hasattr(rng, "expovariate"):
+        rng = _GeneratorDraws(rng)       # numpy Generator
     n = num_requests or spec.num_requests
     cmu, csig = _lognormal_params(spec.ctx_mean, spec.ctx_std)
     gmu, gsig = _lognormal_params(spec.gen_mean, spec.gen_std)
@@ -79,11 +107,12 @@ def synthesize_trace(spec: TraceSpec, arrival_rate: float,
 
 def get_trace(name: str, arrival_rate: float = 0.5, seed: int = 0,
               num_requests: Optional[int] = None,
-              source_len: int = 0) -> List[Request]:
+              source_len: int = 0, rng=None) -> List[Request]:
     if name not in TRACE_SPECS:
         raise KeyError(f"unknown trace {name!r}; known: {sorted(TRACE_SPECS)}")
     return synthesize_trace(TRACE_SPECS[name], arrival_rate, seed=seed,
-                            num_requests=num_requests, source_len=source_len)
+                            num_requests=num_requests, source_len=source_len,
+                            rng=rng)
 
 
 def trace_stats(reqs: List[Request]) -> dict:

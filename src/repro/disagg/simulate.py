@@ -96,6 +96,8 @@ class DisaggSimulator:
         self.pre_sim = PlanSimulator(plan.prefill_plan, store, coll)
         self.dec_sim = PlanSimulator(plan.decode_plan, decode_store,
                                      decode_coll)
+        # last simulate()'s combined pool cache counters (cost reuse)
+        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0}
 
     # -- helpers --------------------------------------------------------------
 
@@ -242,11 +244,14 @@ class DisaggSimulator:
             # stream behind), costed through the same transfer model
             return est_of(r).wire_s
 
+        dec_cache = StepCostCache(self.dec_sim.iteration_cost,
+                                  owner=self.dec_sim)
+        pre_cache = StepCostCache(self.pre_sim.iteration_cost,
+                                  owner=self.pre_sim)
+
         def add_decode_pool(buckets):
             return engine.add_pool(
-                "decode", buckets, dec_cap, dec_pol,
-                StepCostCache(self.dec_sim.iteration_cost,
-                              owner=self.dec_sim),
+                "decode", buckets, dec_cap, dec_pol, dec_cache,
                 windows=self.dec_sim.windows, is_encdec=is_encdec,
                 role="decode",
                 refetch_delay=None if reprefill_occupancy
@@ -255,8 +260,7 @@ class DisaggSimulator:
                 else None)
 
         pre_pool = engine.add_pool(
-            "prefill", pre_buckets, pre_cap, pre_pol,
-            StepCostCache(self.pre_sim.iteration_cost, owner=self.pre_sim),
+            "prefill", pre_buckets, pre_cap, pre_pol, pre_cache,
             windows=self.pre_sim.windows, is_encdec=is_encdec,
             on_finish=on_prefill_finish)
         if reprefill_occupancy:
@@ -286,6 +290,9 @@ class DisaggSimulator:
 
         pre_results = pre_pool.results()
         dec_results = dec_pool.results()
+        self.cache_stats = {
+            k: pre_cache.stats()[k] + dec_cache.stats()[k]
+            for k in ("hits", "misses", "entries")}
         results = pre_results + dec_results
         if not results:
             return SimulationReport.infeasible(plan.label())

@@ -1,0 +1,188 @@
+"""Fluid-limit surrogate (core/fluid.py): report sanity, infeasibility
+agreement with the exact simulator, and the screening property the
+multi-fidelity search relies on — the exact search's winner survives the
+default surrogate frontier, at several seeded (model, trace) points and
+for more than one objective."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (ApexSearch, BatchingPolicy, FluidSimulator,
+                        MultiFidelitySearch, TraceSummary, get_trace,
+                        h100_node, h200_node, ir_from_hf_config, map_scheme)
+from repro.core.fluid import FluidDisaggSimulator
+from repro.core.search import OBJECTIVES
+
+SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+MEDIUM = dict(hidden_size=512, num_hidden_layers=8, num_attention_heads=8,
+              num_key_value_heads=4, intermediate_size=2048, vocab_size=4096)
+
+
+def small_model(name="tiny"):
+    return ir_from_hf_config(SMALL, name=name)
+
+
+def medium_model(name="tiny8"):
+    return ir_from_hf_config(MEDIUM, name=name)
+
+
+def _fluid_sim(model, cluster):
+    search = ApexSearch(model, cluster)
+    cands, _ = search.candidates(feasible_only=True)
+    plan, sim = search.make_simulator(cands[0], fluid=True)
+    return plan, sim
+
+
+# ---------------------------------------------------------------------------
+# surrogate report sanity
+# ---------------------------------------------------------------------------
+
+def test_fluid_report_is_sane():
+    plan, sim = _fluid_sim(small_model(), h100_node(4))
+    reqs = get_trace("chat", arrival_rate=2.0, seed=0, num_requests=32)
+    rep = sim.simulate(reqs)
+    assert rep.feasible
+    assert rep.plan_label == plan.scheme.label()
+    assert rep.e2e_latency > 0
+    assert rep.ttft_mean > 0
+    assert rep.ttft_p95 >= rep.ttft_mean
+    assert rep.tpot_mean > 0
+    assert rep.throughput_tok_s > 0
+    assert rep.total_energy > 0
+    assert 1 <= rep.peak_batch <= 512
+    # counters come from the probe StepCostCache
+    assert sim.cache_stats["misses"] > 0
+
+
+def test_fluid_tracks_exact_scale():
+    """Surrogate means land within a small factor of the exact engine's
+    (it is a screening model, not a clone — but the scale must match)."""
+    model = small_model()
+    cluster = h100_node(4)
+    search = ApexSearch(model, cluster)
+    cands, _ = search.candidates(feasible_only=True)
+    reqs = get_trace("chat", arrival_rate=4.0, seed=3, num_requests=32)
+    _, fluid = search.make_simulator(cands[0], fluid=True)
+    _, exact = search.make_simulator(cands[0])
+    fr = fluid.simulate(reqs)
+    er = exact.simulate(reqs)
+    assert fr.e2e_latency == pytest.approx(er.e2e_latency, rel=0.5)
+    assert fr.throughput_tok_s == pytest.approx(er.throughput_tok_s,
+                                                rel=0.5)
+
+
+def test_fluid_infeasible_when_kv_capacity_zero():
+    """A scheme whose weights leave no KV room is infeasible at BOTH
+    fidelities (same kv_token_capacity gate)."""
+    big = ir_from_hf_config(
+        dict(hidden_size=8192, num_hidden_layers=80,
+             num_attention_heads=64, num_key_value_heads=8,
+             intermediate_size=28672, vocab_size=128256), name="big")
+    from repro.core import generate_schemes
+    cluster = h100_node(1)
+    schemes = [s for s in generate_schemes(big, 1)]
+    plan = map_scheme(schemes[0], cluster)
+    search = ApexSearch(big, cluster)
+    sim = FluidSimulator(plan, search.store, search.coll)
+    reqs = get_trace("chat", arrival_rate=2.0, seed=0, num_requests=8)
+    rep = sim.simulate(reqs)
+    assert not rep.feasible
+
+
+def test_fluid_static_disagg_infeasible():
+    """Static batching has no meaningful decode pool — the fluid disagg
+    surrogate mirrors the exact simulator's infeasible verdict."""
+    model = small_model()
+    search = ApexSearch(model, h100_node(4))
+    cands, kv = search.candidates(feasible_only=True, disaggregated=True,
+                                  max_disagg_plans=4)
+    dis = [c for c in cands if c[0] == "disagg"][0]
+    _, sim = search.make_simulator(dis, kv, fluid=True)
+    reqs = get_trace("chat", arrival_rate=2.0, seed=0, num_requests=8)
+    rep = sim.simulate(reqs, policy=BatchingPolicy(mode="static"))
+    assert not rep.feasible
+
+
+def test_trace_summary_moments():
+    reqs = get_trace("chat", arrival_rate=2.0, seed=0, num_requests=64)
+    ts = TraceSummary.of(reqs)
+    assert ts.n == 64
+    assert ts.span_s == max(r.arrival for r in reqs)
+    assert ts.ctx_mean == pytest.approx(
+        sum(r.context_len for r in reqs) / 64)
+    assert ts.ctx_p95 >= ts.ctx_mean
+    assert ts.gen_p95 >= ts.gen_mean
+    # summary short-circuits recomputation: same report either way
+    plan, sim = _fluid_sim(small_model(), h100_node(4))
+    assert sim.simulate(reqs, summary=ts) == sim.simulate(reqs)
+
+
+def test_fluid_much_faster_than_exact():
+    import time
+    model = medium_model()
+    cluster = h100_node(8)
+    search = ApexSearch(model, cluster)
+    cands, _ = search.candidates(feasible_only=True)
+    reqs = get_trace("summarization", arrival_rate=8.0, seed=0,
+                     num_requests=48)
+    _, exact = search.make_simulator(cands[0])
+    t0 = time.perf_counter()
+    exact.simulate(reqs)
+    t_exact = time.perf_counter() - t0
+    _, fluid = search.make_simulator(cands[0], fluid=True)
+    t0 = time.perf_counter()
+    fluid.simulate(reqs)
+    t_fluid = time.perf_counter() - t0
+    assert t_fluid < t_exact
+
+
+# ---------------------------------------------------------------------------
+# the screening property: exact winners survive the default frontier
+# ---------------------------------------------------------------------------
+
+def _containment_point(model, cluster, reqs, objective, **kw):
+    search = ApexSearch(model, cluster)
+    exact = search.search(reqs, objective=objective, **kw)
+    mf = MultiFidelitySearch(search)
+    mres = mf.search(reqs, objective=objective, **kw)
+    survivors = {mres.surrogate_reports[i].plan_label
+                 for i in mres.survivor_indices}
+    assert exact.best.plan_label in survivors, (
+        f"exact best {exact.best.plan_label} not among "
+        f"{mres.num_survivors} survivors of {mres.num_candidates}")
+    # with the winner in the frontier, exact confirmation must agree on
+    # the objective value (label may differ only on exact ties)
+    key = OBJECTIVES[objective]
+    assert key(mres.best) == pytest.approx(key(exact.best), rel=1e-9)
+    return mres
+
+
+@pytest.mark.parametrize("objective", ["latency", "throughput"])
+def test_exact_best_survives_light_load(objective):
+    """Seeded point 1: small model, light chat load, colocated."""
+    reqs = get_trace("chat", arrival_rate=2.0, seed=0, num_requests=32)
+    _containment_point(small_model(), h100_node(4), reqs, objective,
+                       feasible_only=True)
+
+
+@pytest.mark.parametrize("objective", ["latency", "throughput"])
+def test_exact_best_survives_heavy_load(objective):
+    """Seeded point 2: deeper model, bursty summarization load."""
+    reqs = get_trace("summarization", arrival_rate=100.0, seed=7,
+                     num_requests=40)
+    _containment_point(medium_model(), h100_node(8), reqs, objective,
+                       feasible_only=True)
+
+
+@pytest.mark.parametrize("objective", ["latency", "throughput"])
+def test_exact_best_survives_joint_disagg(objective):
+    """Seeded point 3: joint colocated + heterogeneous-pool disagg."""
+    reqs = get_trace("creation", arrival_rate=4.0, seed=11,
+                     num_requests=24)
+    mres = _containment_point(
+        small_model(), h100_node(8), reqs, objective,
+        feasible_only=True, disaggregated=True, max_disagg_plans=24,
+        pool_menu=[h100_node(4), h200_node(4)])
+    assert mres.num_candidates > mres.result.num_feasible >= 1

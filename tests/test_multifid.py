@@ -1,0 +1,198 @@
+"""Multi-fidelity search + the PR's search-infrastructure satellites:
+``jobs=N`` parallel evaluation equals serial, numpy-Generator trace
+determinism, progress/verbose reporting, and cache counters surfaced in
+``SearchResult``."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ApexSearch, MultiFidelitySearch, get_trace,
+                        h100_node, ir_from_hf_config, synthesize_trace)
+from repro.core.search import fork_map
+from repro.core.trace import TRACE_SPECS
+
+SMALL = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+
+
+def small_model():
+    return ir_from_hf_config(SMALL, name="tiny")
+
+
+def _setup(n_req=24, rate=4.0, seed=0, devices=4):
+    search = ApexSearch(small_model(), h100_node(devices))
+    reqs = get_trace("chat", arrival_rate=rate, seed=seed,
+                     num_requests=n_req)
+    return search, reqs
+
+
+# ---------------------------------------------------------------------------
+# parallel evaluation: jobs=N reproduces serial bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_fork_map_matches_serial():
+    assert fork_map(lambda i: i * i, 7, 3) == [i * i for i in range(7)]
+    assert fork_map(lambda i: i, 0, 4) == []
+
+
+def test_search_jobs_equals_serial():
+    search, reqs = _setup()
+    serial = search.search(reqs, feasible_only=True)
+    par = search.search(reqs, feasible_only=True, jobs=2)
+    assert par.all_reports == serial.all_reports
+    assert par.best == serial.best
+    assert (par.cache_hits, par.cache_misses) == \
+        (serial.cache_hits, serial.cache_misses)
+
+
+def test_multifid_jobs_equals_serial():
+    search, reqs = _setup()
+    mf = MultiFidelitySearch(search)
+    serial = mf.search(reqs, feasible_only=True)
+    par = mf.search(reqs, feasible_only=True, jobs=2)
+    assert par.survivor_indices == serial.survivor_indices
+    assert par.result.all_reports == serial.result.all_reports
+    assert par.best == serial.best
+
+
+# ---------------------------------------------------------------------------
+# trace synthesis with an explicit numpy Generator
+# ---------------------------------------------------------------------------
+
+def test_numpy_generator_traces_identical_across_instances():
+    """Two independently seeded Generators — the stand-in for two worker
+    processes — produce byte-identical traces."""
+    spec = TRACE_SPECS["chat"]
+    a = synthesize_trace(spec, arrival_rate=1.0,
+                         rng=np.random.default_rng(42))
+    b = synthesize_trace(spec, arrival_rate=1.0,
+                         rng=np.random.default_rng(42))
+    assert a == b
+    c = synthesize_trace(spec, arrival_rate=1.0,
+                         rng=np.random.default_rng(43))
+    assert a != c
+
+
+def test_numpy_generator_trace_has_spec_moments():
+    spec = TRACE_SPECS["chat"]
+    reqs = synthesize_trace(spec, arrival_rate=1.0, num_requests=4000,
+                            rng=np.random.default_rng(0))
+    from repro.core import trace_stats
+    stats = trace_stats(reqs)
+    assert stats["ctx_mean"] == pytest.approx(spec.ctx_mean, rel=0.15)
+    assert stats["gen_mean"] == pytest.approx(spec.gen_mean, rel=0.15)
+
+
+def test_default_rng_path_unchanged():
+    """Passing no rng still uses the seeded random.Random draws."""
+    spec = TRACE_SPECS["chat"]
+    import random
+    a = synthesize_trace(spec, arrival_rate=1.0, seed=5)
+    b = synthesize_trace(spec, arrival_rate=1.0,
+                         rng=random.Random(5))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# progress callbacks + verbose output
+# ---------------------------------------------------------------------------
+
+def test_progress_two_and_three_arg():
+    search, reqs = _setup(n_req=12)
+    seen2, seen3 = [], []
+    search.search(reqs, feasible_only=True,
+                  progress=lambda done, total: seen2.append((done, total)))
+    search.search(reqs, feasible_only=True,
+                  progress=lambda done, total, best:
+                  seen3.append((done, total, best)))
+    total = seen2[-1][1]
+    assert [d for d, _ in seen2] == list(range(1, total + 1))
+    assert len(seen3) == total
+    # once a feasible plan has been seen, the running best is a report
+    assert seen3[-1][2] is not None
+    assert seen3[-1][2].feasible
+
+
+def test_verbose_prints_progress(capsys):
+    search, reqs = _setup(n_req=12)
+    search.search(reqs, feasible_only=True, verbose=True)
+    out = capsys.readouterr().out
+    assert "[search]" in out
+    assert "evaluated" in out and "best=" in out
+
+
+def test_multifid_verbose_and_progress(capsys):
+    search, reqs = _setup(n_req=12)
+    mf = MultiFidelitySearch(search)
+    calls = []
+    mf.search(reqs, feasible_only=True, verbose=True,
+              progress=lambda done, total: calls.append((done, total)))
+    out = capsys.readouterr().out
+    assert "[screen]" in out and "survivors" in out
+    assert "[confirm]" in out
+    # progress covers the confirmation sweep
+    assert calls and calls[-1][0] == calls[-1][1]
+
+
+# ---------------------------------------------------------------------------
+# cache counters in SearchResult
+# ---------------------------------------------------------------------------
+
+def test_search_result_has_cache_counters():
+    search, reqs = _setup(n_req=16)
+    res = search.search(reqs, feasible_only=True)
+    assert res.cache_misses > 0
+    assert res.cache_hits > 0          # repeated steps within a trace
+    mf = MultiFidelitySearch(search)
+    mres = mf.search(reqs, feasible_only=True)
+    assert mres.result.cache_misses > 0
+
+
+# ---------------------------------------------------------------------------
+# multi-fidelity mechanics
+# ---------------------------------------------------------------------------
+
+def test_multifid_prunes_under_load():
+    """On a loaded trace the surrogate separates candidates, so the
+    frontier is a strict subset of the candidate set."""
+    model = ir_from_hf_config(
+        dict(hidden_size=512, num_hidden_layers=8, num_attention_heads=8,
+             num_key_value_heads=4, intermediate_size=2048,
+             vocab_size=4096), name="tiny8")
+    search = ApexSearch(model, h100_node(8))
+    reqs = get_trace("summarization", arrival_rate=100.0, seed=0,
+                     num_requests=40)
+    mf = MultiFidelitySearch(search)
+    mres = mf.search(reqs, feasible_only=True)
+    assert mres.num_survivors < mres.num_candidates
+    assert len(mres.surrogate_reports) == mres.num_candidates
+    assert len(mres.result.all_reports) == mres.num_survivors
+    assert mres.screen_seconds > 0 and mres.confirm_seconds > 0
+    assert mres.surrogate_plans_per_sec > 0
+
+
+def test_multifid_narrow_frontier_still_returns_feasible():
+    search, reqs = _setup(n_req=16)
+    mf = MultiFidelitySearch(search, frontier_k=1,
+                             screen_objectives=["latency"], tie_rel=0.0)
+    mres = mf.search(reqs, feasible_only=True)
+    assert mres.best.feasible
+    assert 1 <= mres.num_survivors <= mres.num_candidates
+
+
+def test_multifid_rejects_unknown_screen_objective():
+    search, _ = _setup()
+    with pytest.raises(KeyError):
+        MultiFidelitySearch(search, screen_objectives=["nope"])
+
+
+def test_multifid_slo_band_widens_frontier():
+    """With an SLO set, near-feasible candidates under the slackened
+    band join the frontier."""
+    search, reqs = _setup(n_req=16)
+    mf = MultiFidelitySearch(search)
+    base = mf.search(reqs, feasible_only=True)
+    slo = mf.search(reqs, feasible_only=True,
+                    slo_ttft_s=base.best.ttft_p95 * 4)
+    assert slo.best.feasible
+    assert slo.num_survivors >= 1
