@@ -1,0 +1,155 @@
+"""SLO-goodput benchmark: what does optimizing the right objective buy?
+
+Runs a mixed two-tenant trace (latency-sensitive chat + batchy
+summarization, each with its own SLO class) through the exact plan
+search twice — once ranking by ``goodput`` (requests meeting their
+class SLO per second), once by plain ``latency`` — and reports what the
+latency-optimal plan gives up in SLO attainment.  Also times the
+multi-fidelity goodput search (fluid screen + exact confirm) and checks
+the exact goodput winner survived the fluid screen.
+
+Writes ``BENCH_goodput.json`` next to the repo root (companion of
+``BENCH_core.json``/``BENCH_search.json``):
+
+    PYTHONPATH=src python benchmarks/bench_goodput.py [--smoke] [--jobs N]
+                                                      [--out PATH]
+
+``--smoke`` shrinks the model/cluster for CI (seconds, not minutes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core import (ApexSearch, MultiFidelitySearch, SLOClass,
+                        h100_node, ir_from_hf_config, mixed_trace)
+
+SMOKE_CFG = dict(hidden_size=256, num_hidden_layers=4,
+                 num_attention_heads=8, num_key_value_heads=4,
+                 intermediate_size=1024, vocab_size=1024)
+FULL_CFG = dict(hidden_size=2048, num_hidden_layers=16,
+                num_attention_heads=16, num_key_value_heads=8,
+                intermediate_size=8192, vocab_size=32000)
+
+
+def build(smoke: bool):
+    if smoke:
+        model = ir_from_hf_config(SMOKE_CFG, name="tiny")
+        cluster = h100_node(4)
+        chat = SLOClass("chat", priority=1, ttft_target_s=0.005,
+                        tpot_target_s=3e-4)
+        summ = SLOClass("summarization", priority=0, ttft_target_s=0.03)
+        n_chat, n_summ, rate = 48, 16, 4.0
+    else:
+        model = ir_from_hf_config(FULL_CFG, name="tiny-7b")
+        cluster = h100_node(8)
+        chat = SLOClass("chat", priority=1, ttft_target_s=4e-3,
+                        tpot_target_s=1.4e-3)
+        summ = SLOClass("summarization", priority=0, ttft_target_s=8e-3)
+        n_chat, n_summ, rate = 96, 32, 48.0
+    search = ApexSearch(model, cluster)
+    reqs = mixed_trace([("chat", rate, chat, n_chat),
+                        ("summarization", rate / 4, summ, n_summ)], seed=7)
+    return search, reqs
+
+
+def report_row(rep):
+    return {
+        "plan": rep.plan_label,
+        "goodput_rps": round(rep.goodput_rps, 3),
+        "ttft_p95_ms": round(rep.ttft_p95 * 1e3, 2),
+        "tpot_p95_ms": round(rep.tpot_p95 * 1e3, 3),
+        "classes": [{
+            "name": c.name,
+            "slo_met": c.slo_met,
+            "n": c.num_requests,
+            "ttft_p95_ms": round(c.ttft_p95 * 1e3, 2),
+            "goodput_rps": round(c.goodput_rps, 3),
+        } for c in rep.class_reports or ()],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizing for CI (seconds, not minutes)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="forked workers for the exact sweeps")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+
+    search, reqs = build(args.smoke)
+
+    sweeps = {}
+    for objective in ("goodput", "latency"):
+        t0 = time.perf_counter()
+        res = search.search(reqs, objective=objective, jobs=args.jobs)
+        sweeps[objective] = (res, round(time.perf_counter() - t0, 3))
+
+    goodput_best = sweeps["goodput"][0].best
+    latency_best = sweeps["latency"][0].best
+
+    t0 = time.perf_counter()
+    mres = MultiFidelitySearch(search).search(reqs, objective="goodput",
+                                              jobs=args.jobs)
+    mf_seconds = round(time.perf_counter() - t0, 3)
+    survived = {mres.surrogate_reports[i].plan_label
+                for i in mres.survivor_indices}
+
+    out = {
+        "bench": "bench_goodput",
+        "smoke": args.smoke,
+        "jobs": args.jobs,
+        "n_requests": len(reqs),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "num_candidates": sweeps["goodput"][0].num_schemes,
+        # spread of SLO-goodput across feasible plans: shows how much
+        # the plan choice moves attainment on this trace
+        "goodput_rps_min_max": [
+            round(min(r.goodput_rps for r in
+                      sweeps["goodput"][0].all_reports if r.feasible), 3),
+            round(max(r.goodput_rps for r in
+                      sweeps["goodput"][0].all_reports if r.feasible), 3)],
+        "goodput_optimal": report_row(goodput_best),
+        "latency_optimal": report_row(latency_best),
+        "goodput_gain_rps": round(
+            goodput_best.goodput_rps - latency_best.goodput_rps, 3),
+        "exact_seconds": {obj: s for obj, (_, s) in sweeps.items()},
+        "multifid": {
+            "total_seconds": mf_seconds,
+            "screen_seconds": round(mres.screen_seconds, 3),
+            "confirm_seconds": round(mres.confirm_seconds, 3),
+            "num_survivors": mres.num_survivors,
+            "best": mres.best.plan_label,
+            "exact_winner_survived":
+                goodput_best.plan_label in survived,
+        },
+    }
+    path = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_goodput.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+    for tag in ("goodput_optimal", "latency_optimal"):
+        row = out[tag]
+        cls = ", ".join(f"{c['name']}: {c['slo_met']}/{c['n']}"
+                        for c in row["classes"])
+        print(f"{tag}: {row['plan']} -> {row['goodput_rps']} req/s "
+              f"({cls})")
+    print(f"goodput gain over latency-optimal: "
+          f"{out['goodput_gain_rps']} req/s")
+    m = out["multifid"]
+    print(f"multifid[goodput]: {out['num_candidates']} -> "
+          f"{m['num_survivors']} survivors in {m['total_seconds']}s, "
+          f"winner survived={m['exact_winner_survived']}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

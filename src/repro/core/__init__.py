@@ -2,12 +2,14 @@
 planning for LLM serving via dynamism-aware simulation."""
 
 from .batching import BatchingModule, BatchingPolicy, BatchingResult
-from .engine import (ContinuousScheduler, Engine, SchedulerPolicy,
-                     SharedLink, StaticScheduler, StepCostCache)
-from .metrics import percentile
+from .engine import (ContinuousScheduler, Engine, PreemptionPolicy,
+                     SacrificePolicy, SchedulerPolicy, SharedLink,
+                     StaticScheduler, StepCostCache, SwapPolicy,
+                     make_preemption)
+from .metrics import ClassReport, p50, p95, p99, percentile
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
                       cpu_local, cross_pool_link, get_cluster,
-                      h100_multinode, h100_node, h200_node,
+                      h100_multinode, h100_node, h200_node, host_link,
                       tpu_v5e_multipod, tpu_v5e_pod)
 from .ir import (AttentionCell, Block, Cell, CrossAttentionCell, MLACell,
                  MLPCell, ModelIR, MoECell, OpCall, SSMCell, Workload,
@@ -24,27 +26,35 @@ from .search import ApexSearch, SearchResult, compare_three_plans, fork_map
 from .simulator import PlanSimulator, SimulationReport
 from .templates import CellScheme, CollectiveCall, reshard_collectives, \
     schemes_for_cell
-from .trace import Request, TRACE_SPECS, get_trace, synthesize_trace, \
-    trace_stats
+from .trace import (DEFAULT_SLO, ClassTraffic, Request, SLOClass,
+                    TRACE_SPECS, get_trace, mixed_trace, retag_slo,
+                    synthesize_mixed_trace, synthesize_trace, trace_stats)
 
 __all__ = [
     "ApexSearch", "AnalyticBackend", "AttentionCell", "BatchingModule",
     "BatchingPolicy", "BatchingResult", "Block", "Cell", "CellScheme",
-    "CLUSTER_PRESETS", "Cluster", "CollectiveCall", "CollectiveModel",
-    "ContinuousScheduler", "CrossAttentionCell", "DeviceSpec", "Engine",
+    "CLUSTER_PRESETS", "ClassReport", "ClassTraffic", "Cluster",
+    "CollectiveCall", "CollectiveModel",
+    "ContinuousScheduler", "CrossAttentionCell", "DEFAULT_SLO",
+    "DeviceSpec", "Engine",
     "ExecutionPlan", "FORMATS", "FluidDisaggSimulator", "FluidSimulator",
     "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
     "MultiFidelityResult", "MultiFidelitySearch",
-    "NetworkLevel", "OpCall", "TraceSummary", "cpu_local", "fork_map",
+    "NetworkLevel", "OpCall", "PreemptionPolicy", "SLOClass",
+    "TraceSummary", "cpu_local", "fork_map",
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
-    "QuantFormat", "Request", "SSMCell", "SchedulerPolicy", "SearchResult",
+    "QuantFormat", "Request", "SSMCell", "SacrificePolicy",
+    "SchedulerPolicy", "SearchResult",
     "SharedLink", "SimulationReport", "StaticScheduler", "StepCostCache",
+    "SwapPolicy",
     "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
     "cross_pool_link", "divisors", "generate_schemes", "get_cluster",
-    "get_format", "get_trace", "percentile",
+    "get_format", "get_trace", "host_link", "make_preemption",
+    "mixed_trace", "p50", "p95", "p99", "percentile",
     "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
     "ir_from_hf_config", "map_scheme", "prefilter_schemes",
-    "register_format",
-    "reshard_collectives", "schemes_for_cell", "synthesize_trace",
+    "register_format", "retag_slo",
+    "reshard_collectives", "schemes_for_cell", "synthesize_mixed_trace",
+    "synthesize_trace",
     "tpu_v5e_multipod", "tpu_v5e_pod", "trace_stats",
 ]

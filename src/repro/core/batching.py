@@ -38,9 +38,11 @@ import dataclasses
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from .ir import Workload
-from .trace import Request
+from .trace import DEFAULT_SLO, Request, SLOClass
 
 RefetchDelay = Callable[[Request], float]
+# (victim request, its live KV tokens) -> (round-trip delay_s, energy_j)
+SwapCost = Callable[[Request, int], Tuple[float, float]]
 
 
 @dataclasses.dataclass
@@ -61,8 +63,11 @@ class RequestRecord:
     gen_len: int
     first_token_time: float = 0.0
     finish_time: float = 0.0
-    preemptions: int = 0
+    preemptions: int = 0          # total evictions (sacrifices + swaps)
     refetch_s: float = 0.0        # KV re-fetch delay charged on re-admissions
+    swaps: int = 0                # evictions served by KV swap (not recompute)
+    swap_s: float = 0.0           # host-link round-trip delay charged on swaps
+    slo_class: SLOClass = DEFAULT_SLO
 
     @property
     def ttft(self) -> float:
@@ -85,10 +90,13 @@ class BatchingResult:
     iterations: int
     total_time: float
     total_energy: float
-    preemptions: int
+    preemptions: int              # total evictions (sacrifices + swaps)
     peak_kv_tokens: int
     peak_batch: int
     kv_refetch_s: float = 0.0     # total re-fetch delay across all victims
+    swap_outs: int = 0            # victims whose KV moved to host
+    swap_ins: int = 0             # swapped victims re-admitted from host
+    kv_swap_s: float = 0.0        # total host-link delay across all swaps
 
 
 StepCost = Callable[[Workload], Tuple[float, float]]
@@ -102,7 +110,9 @@ class BatchingModule:
                  max_sequences: int = 512,
                  is_encdec: bool = False,
                  role: str = "both",
-                 refetch_delay: Optional[RefetchDelay] = None):
+                 refetch_delay: Optional[RefetchDelay] = None,
+                 preemption=None,
+                 swap_cost: Optional[SwapCost] = None):
         if kv_capacity_tokens <= 0:
             raise ValueError("plan has no KV capacity — infeasible")
         if role not in ("both", "decode"):
@@ -112,6 +122,12 @@ class BatchingModule:
         self.windows = tuple(model_windows)
         self.max_sequences = max_sequences
         self.is_encdec = is_encdec
+        # KV-overflow handling: a PreemptionPolicy object or a menu string
+        # ("sacrifice", "swap", "swap/lowest-priority-first", ...); None is
+        # today's default, sacrifice + recent-first.  ``swap_cost`` prices
+        # one victim's host round trip for the swap mechanism.
+        self.preemption = preemption
+        self.swap_cost = swap_cost
         # role="decode" models the decode pool of a disaggregated
         # deployment: an admitted request's prompt KV is already
         # materialized (shipped from the prefill pool), so admission starts
@@ -135,7 +151,8 @@ class BatchingModule:
             "solo", [list(requests)], self.capacity, self.policy,
             step_cost, windows=self.windows,
             max_sequences=self.max_sequences, is_encdec=self.is_encdec,
-            role=self.role, refetch_delay=self.refetch_delay)
+            role=self.role, refetch_delay=self.refetch_delay,
+            preemption=self.preemption, swap_cost=self.swap_cost)
         engine.run()
         results = pool.results()
         if not results:

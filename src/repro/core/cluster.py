@@ -157,6 +157,21 @@ def cross_pool_link(prefill: "Cluster", decode: "Cluster",
     )
 
 
+def host_link(name: str = "host-pcie",
+              bw_bytes_s: float = 64e9,
+              latency_s: float = 2e-6,
+              launch_s: float = 1e-5) -> NetworkLevel:
+    """The device<->host-DRAM link one device swaps KV over.
+
+    Defaults model a PCIe Gen5 x16 endpoint (~64 GB/s per direction).
+    This is the link the ``swap`` preemption mechanism prices its KV
+    round trips on (engine ``SwapPolicy``); group_size=1 because a swap
+    is a single device-local DMA, not a collective.
+    """
+    return NetworkLevel(name=name, group_size=1, bw_per_device=bw_bytes_s,
+                        latency_s=latency_s, launch_s=launch_s)
+
+
 # ---------------------------------------------------------------------------
 # Device presets
 # ---------------------------------------------------------------------------

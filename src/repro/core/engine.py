@@ -26,10 +26,22 @@ identical to the deleted per-replica loops (frozen goldens in
 tests/test_engine_golden.py): a replica's event chain performs exactly
 the old loop's arithmetic; the heap only interleaves independent chains.
 
-Extension point: subclass ``SchedulerPolicy`` (``admit`` / ``build`` /
-``apply``) to model a new batching discipline — priority scheduling,
-fairness quanta, speculative-decode steps — and pass it anywhere a
-``BatchingPolicy`` config is accepted today.
+Extension points:
+
+  * subclass ``SchedulerPolicy`` (``admit`` / ``build`` / ``apply``) to
+    model a new batching discipline — priority scheduling, fairness
+    quanta, speculative-decode steps — and pass it anywhere a
+    ``BatchingPolicy`` config is accepted today;
+  * subclass ``PreemptionPolicy`` (``select`` / ``evict``) to model a
+    new KV-overflow response.  The built-in menu crosses two mechanisms
+    — ``sacrifice`` (drop the victim's KV and recompute, the paper's
+    default) and ``swap`` (park the KV on the host over a PCIe-class
+    link and restore it later, progress preserved) — with two victim
+    orders — ``recent-first`` (LIFO, the paper's rule) and
+    ``lowest-priority-first`` (evict the cheapest SLO class first).
+    Any scheduler composes with any preemption policy; in the disagg
+    decode role the ``on_preempt`` re-prefill coupling fires only for
+    sacrifice (a swapped victim's KV never left the node).
 """
 
 from __future__ import annotations
@@ -40,7 +52,7 @@ import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .batching import (BatchingPolicy, BatchingResult, RefetchDelay,
-                       RequestRecord, StepCost)
+                       RequestRecord, StepCost, SwapCost)
 from .ir import Workload
 from .trace import Request
 
@@ -175,6 +187,133 @@ class _Active:
 
 
 # ---------------------------------------------------------------------------
+# preemption policies (victim selection x eviction mechanism)
+# ---------------------------------------------------------------------------
+
+class PreemptionPolicy:
+    """What happens when a replica's KV memory overflows.
+
+    Two orthogonal axes, each a subclass hook:
+
+      * ``select(A)`` — WHICH active request to evict.  ``recent``
+        (default) is the paper's LIFO rule: the most recently admitted
+        request goes first.  ``priority`` evicts the lowest
+        ``SLOClass.priority`` first (most-recent within a class), so a
+        latency-sensitive tenant survives pressure from a batchy one.
+      * ``evict(A, victim, now)`` — HOW to free the memory (the
+        mechanism subclasses implement).
+
+    ``overflow`` preserves the engine's two invariants verbatim: evict
+    until KV fits, and never evict the last active request (a single
+    sequence whose prompt+generation exceeds capacity must run to
+    completion — evicting it would requeue-loop forever).
+    """
+
+    mechanism = "abstract"
+
+    def __init__(self, victim: str = "recent"):
+        victim = _VICTIM_ALIASES.get(victim, victim)
+        if victim not in ("recent", "priority"):
+            raise ValueError(
+                f"unknown victim order {victim!r}; known: recent-first, "
+                f"lowest-priority-first")
+        self.victim = victim
+
+    def select(self, A: "Replica") -> "_Active":
+        if self.victim == "priority":
+            return max(A.active,
+                       key=lambda a: (-a.req.slo_class.priority, a.order))
+        return max(A.active, key=lambda a: a.order)
+
+    def evict(self, A: "Replica", victim: "_Active", now: float) -> None:
+        raise NotImplementedError
+
+    def overflow(self, A: "Replica", now: float) -> None:
+        while A.kv_used() > A.capacity and len(A.active) > 1:
+            victim = self.select(A)
+            A.active.remove(victim)
+            A.records[victim.req.rid].preemptions += 1
+            A.preemptions += 1
+            self.evict(A, victim, now)
+
+    def label(self) -> str:
+        return f"{self.mechanism}/{self.victim}"
+
+
+class SacrificePolicy(PreemptionPolicy):
+    """Drop the victim's KV and recompute from scratch (paper §3.3's
+    only mode, and still the default).  In the disagg decode role the
+    shipped prompt KV is gone, so the victim must re-fetch it — the
+    ``on_preempt`` re-prefill coupling fires here and ONLY here."""
+
+    mechanism = "sacrifice"
+
+    def evict(self, A: "Replica", victim: "_Active", now: float) -> None:
+        victim.reset()
+        if A.role == "decode":
+            # the shipped prompt KV was dropped; the victim only
+            # becomes admissible again after re-fetching it
+            A.refetch(victim.req, now)
+        else:
+            A.pending.insert(0, victim.req)
+
+
+class SwapPolicy(PreemptionPolicy):
+    """Move the victim's KV to host memory and bring it back later —
+    progress preserved, no recompute.  The victim re-enters the pending
+    queue ``delay`` seconds out, where ``delay`` is the host-link round
+    trip (swap-out now + swap-in before resumption) priced by the pool's
+    ``swap_cost`` callback over a PCIe-class ``NetworkLevel``; on
+    re-admission its prefill/decode counters are restored from the
+    parked snapshot.  Works identically in the decode role: the KV never
+    left the node, so no re-prefill and no wire re-ship."""
+
+    mechanism = "swap"
+
+    def evict(self, A: "Replica", victim: "_Active", now: float) -> None:
+        delay, energy = A.pool.swap_cost(victim.req, victim.kv_tokens)
+        delay = max(0.0, delay)
+        rec = A.records[victim.req.rid]
+        rec.swaps += 1
+        rec.swap_s += delay
+        A.swap_outs += 1
+        A.kv_swap_s += delay
+        A.energy += energy
+        A.swapped[victim.req.rid] = (victim.prefill_done, victim.generated,
+                                     victim.first_token_time)
+        ready = now + delay
+        re_req = dataclasses.replace(victim.req, arrival=ready)
+        idx = 0
+        while (idx < len(A.pending)
+               and A.pending[idx].arrival <= ready):
+            idx += 1
+        A.pending.insert(idx, re_req)
+
+
+_VICTIM_ALIASES = {
+    "recent-first": "recent", "lifo": "recent",
+    "lowest-priority-first": "priority", "lowest-priority": "priority",
+}
+_MECHANISMS = {"sacrifice": SacrificePolicy, "swap": SwapPolicy}
+
+
+def make_preemption(spec) -> PreemptionPolicy:
+    """Resolve the ``preemption=`` plumbing: None (the default,
+    sacrifice + recent-first), a ``PreemptionPolicy`` instance, or a
+    menu string ``"<mechanism>[/<victim>]"`` — e.g. ``"swap"``,
+    ``"sacrifice/lowest-priority-first"``."""
+    if spec is None:
+        return SacrificePolicy()
+    if isinstance(spec, PreemptionPolicy):
+        return spec
+    mechanism, _, victim = str(spec).partition("/")
+    if mechanism not in _MECHANISMS:
+        raise ValueError(f"unknown preemption mechanism {mechanism!r}; "
+                         f"known: {sorted(_MECHANISMS)}")
+    return _MECHANISMS[mechanism](victim or "recent")
+
+
+# ---------------------------------------------------------------------------
 # scheduler policies
 # ---------------------------------------------------------------------------
 
@@ -217,8 +356,13 @@ class ContinuousScheduler(SchedulerPolicy):
     def admit(self, A: "Replica") -> None:
         cfg = self.cfg
         while A.pending and A.pending[0].arrival <= A.now:
+            # a swap-parked victim's demand is its full parked KV
+            # (prompt + generated so far), not just its prompt
+            saved = A.swapped.get(A.pending[0].rid) if A.swapped else None
+            demand = (saved[0] + saved[1]) if saved is not None \
+                else A.pending[0].context_len
             headroom = len(A.active) + 1
-            cap_ok = (A.kv_reserved() + A.pending[0].context_len
+            cap_ok = (A.kv_reserved() + demand
                       + headroom <= A.capacity)
             # liveness: an idle engine always admits its head request,
             # even one whose prompt alone exceeds KV capacity (it runs
@@ -233,6 +377,15 @@ class ContinuousScheduler(SchedulerPolicy):
             req = A.pending.pop(0)
             a = _Active(req=req, admitted_at=A.now, order=A.order)
             A.order += 1
+            if saved is not None:
+                # swap-in: restore the parked progress snapshot — no
+                # recompute, no first-token re-stamp, and (enc-dec) no
+                # re-run of the encoder
+                del A.swapped[req.rid]
+                a.prefill_done, a.generated, a.first_token_time = saved
+                A.swap_ins += 1
+                A.active.append(a)
+                continue
             if A.role == "decode":
                 # prompt KV arrived from the prefill pool; the first
                 # token was already emitted there.  Standalone records
@@ -338,23 +491,9 @@ class ContinuousScheduler(SchedulerPolicy):
                     A.finish(a.req, rec, rec.finish_time)
                 A.active = [a for a in A.active if not a.done]
 
-        # ---- KV overflow -> preempt most-recent (paper §3.3) ----
-        # never evict the LAST active request: a single sequence whose
-        # prompt+generation exceeds capacity must run to completion
-        # (evicting it would requeue-loop forever); real engines
-        # likewise always keep at least one sequence scheduled.
-        while A.kv_used() > A.capacity and len(A.active) > 1:
-            victim = max(A.active, key=lambda a: a.order)
-            A.active.remove(victim)
-            victim.reset()
-            A.records[victim.req.rid].preemptions += 1
-            A.preemptions += 1
-            if A.role == "decode":
-                # the shipped prompt KV was dropped; the victim only
-                # becomes admissible again after re-fetching it
-                A.refetch(victim.req, now)
-            else:
-                A.pending.insert(0, victim.req)
+        # ---- KV overflow -> the pool's PreemptionPolicy decides ----
+        # (default: sacrifice + recent-first, the paper's §3.3 rule)
+        A.pool.preemption.overflow(A, now)
         A.peak_kv = max(A.peak_kv, A.kv_used())
 
     def _ff_steps(self, A: "Replica", dur: float) -> int:
@@ -469,10 +608,12 @@ class Replica:
         self.pending: List[Request] = sorted(requests,
                                              key=lambda r: r.arrival)
         self.records: Dict[int, RequestRecord] = {
-            r.rid: RequestRecord(r.rid, r.arrival, r.context_len, r.gen_len)
+            r.rid: RequestRecord(r.rid, r.arrival, r.context_len, r.gen_len,
+                                 slo_class=r.slo_class)
             for r in requests}
         self.shadow: set = set()      # rids of engine-internal jobs
         self.active: List[_Active] = []
+        self.swapped: Dict[int, tuple] = {}   # rid -> parked progress
         self.new_admissions: List[_Active] = []
         self.now = 0.0
         self.busy = False
@@ -482,6 +623,9 @@ class Replica:
         self.iters = 0
         self.energy = 0.0
         self.preemptions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.kv_swap_s = 0.0
         self.peak_kv = 0
         self.peak_batch = 0
         self.kv_refetch_s = 0.0
@@ -580,7 +724,8 @@ class Replica:
         """A routed/transferred/re-fetched request becomes visible."""
         if req.rid not in self.records:
             self.records[req.rid] = RequestRecord(
-                req.rid, req.arrival, req.context_len, req.gen_len)
+                req.rid, req.arrival, req.context_len, req.gen_len,
+                slo_class=req.slo_class)
         idx = bisect.bisect_right([p.arrival for p in self.pending],
                                   req.arrival)
         self.pending.insert(idx, req)
@@ -694,7 +839,10 @@ class Replica:
                               preemptions=self.preemptions,
                               peak_kv_tokens=self.peak_kv,
                               peak_batch=self.peak_batch,
-                              kv_refetch_s=self.kv_refetch_s)
+                              kv_refetch_s=self.kv_refetch_s,
+                              swap_outs=self.swap_outs,
+                              swap_ins=self.swap_ins,
+                              kv_swap_s=self.kv_swap_s)
 
 
 # ---------------------------------------------------------------------------
@@ -714,7 +862,9 @@ class Pool:
                  role: str = "both",
                  refetch_delay: Optional[RefetchDelay] = None,
                  on_finish: Optional[Callable] = None,
-                 on_preempt: Optional[Callable] = None):
+                 on_preempt: Optional[Callable] = None,
+                 preemption=None,
+                 swap_cost: Optional[SwapCost] = None):
         if capacity <= 0:
             raise ValueError("pool has no KV capacity — infeasible")
         if role not in ("both", "decode"):
@@ -738,6 +888,13 @@ class Pool:
         self.refetch_delay = refetch_delay
         self.on_finish = on_finish
         self.on_preempt = on_preempt
+        # KV-overflow policy: every replica of the pool shares one
+        # PreemptionPolicy (menu string or instance; None = sacrifice +
+        # recent-first, the legacy behaviour, bit-identical to goldens).
+        self.preemption = make_preemption(preemption)
+        # Prices one victim's host round trip: (req, kv_tokens) ->
+        # (delay_s, energy_j).  Only the swap mechanism consults it.
+        self.swap_cost: SwapCost = swap_cost or (lambda req, kv: (0.0, 0.0))
         self.incoming: List[float] = []      # scheduled delivery times
         self.incoming_unknown = 0            # parked, time not yet known
         # coupled topologies: the pool whose iteration-end events spawn

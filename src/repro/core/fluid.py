@@ -48,13 +48,27 @@ from .batching import BatchingPolicy
 from .engine import StepCostCache
 from .ir import Workload
 from .mapper import ExecutionPlan
-from .metrics import SimulationReport, percentile
+from .metrics import ClassReport, SimulationReport, percentile
 from .profiles import CollectiveModel, ProfileStore
 from .simulator import PlanSimulator
-from .trace import Request
+from .trace import DEFAULT_SLO, Request, SLOClass, retag_slo
 
 # engine Pool default — the surrogate's sequence-slot cap must match
 _MAX_SEQUENCES = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSummary:
+    """One SLO class's slice of a trace summary: its population and its
+    own length moments, so multi-tenant screening does not collapse the
+    mix into one aggregate distribution."""
+
+    slo: SLOClass
+    n: int
+    ctx_mean: float
+    gen_mean: float
+    ctx_p95: float
+    gen_p95: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +85,9 @@ class TraceSummary:
     ctx_p95: float
     gen_p95: float
     source_mean: float = 0.0  # encoder-side tokens (enc-dec models)
+    # per-SLO-class populations (highest priority first); empty means
+    # treat the whole trace as one DEFAULT_SLO class
+    classes: tuple = ()
 
     @classmethod
     def of(cls, requests: Sequence[Request]) -> "TraceSummary":
@@ -80,13 +97,29 @@ class TraceSummary:
         span = max(r.arrival for r in requests)
         ctxs = [r.context_len for r in requests]
         gens = [r.gen_len for r in requests]
+        groups: dict = {}
+        for r in requests:
+            groups.setdefault(r.slo_class, []).append(r)
+        classes = []
+        for slo in sorted(groups, key=lambda s: (-s.priority, s.name)):
+            rs = groups[slo]
+            k = len(rs)
+            classes.append(ClassSummary(
+                slo=slo, n=k,
+                ctx_mean=sum(r.context_len for r in rs) / k,
+                gen_mean=sum(r.gen_len for r in rs) / k,
+                ctx_p95=float(percentile(
+                    [float(r.context_len) for r in rs], 0.95)),
+                gen_p95=float(percentile(
+                    [float(r.gen_len) for r in rs], 0.95))))
         return cls(
             n=n, span_s=span,
             arrival_rate=n / span if span > 0 else float("inf"),
             ctx_mean=sum(ctxs) / n, gen_mean=sum(gens) / n,
             ctx_p95=float(percentile([float(c) for c in ctxs], 0.95)),
             gen_p95=float(percentile([float(g) for g in gens], 0.95)),
-            source_mean=sum(r.source_len for r in requests) / n)
+            source_mean=sum(r.source_len for r in requests) / n,
+            classes=tuple(classes))
 
 
 @dataclasses.dataclass
@@ -156,20 +189,75 @@ def _probe_rates(sim: PlanSimulator, cache: StepCostCache,
                       b_cap=b_cap, dp=dp)
 
 
+def _attained_fraction(mean: float, p95v: float,
+                       target: Optional[float]) -> float:
+    """Fraction of requests under ``target`` given the surrogate's
+    (mean, p95) dispersion pair: 0.5 of the mass sits at or below the
+    mean, 0.95 at or below p95, linear between — a two-point CDF sketch,
+    enough to rank plans by goodput, not a tail model."""
+    if target is None:
+        return 1.0
+    if target <= 0.0:
+        return 0.0
+    if mean <= 0.0 or (target >= p95v and target >= mean):
+        return 1.0
+    if target <= mean:
+        return min(1.0, 0.5 * target / mean)
+    return min(1.0, 0.5 + 0.45 * (target - mean) / max(p95v - mean, 1e-12))
+
+
+def _class_goodput(ts: TraceSummary, wait: float, t_pre: float,
+                   tpot: float, drain_s: float) -> tuple:
+    """(goodput_rps, class_reports) from the fluid means, split per SLO
+    class: every class shares the queueing wait and decode pacing, but
+    pays prefill service proportional to its OWN mean prompt, and its
+    TTFT dispersion comes from its own length spread — so a latency-tight
+    chat class is not judged by a batchy summarization class's tails."""
+    classes = ts.classes or (ClassSummary(
+        DEFAULT_SLO, ts.n, ts.ctx_mean, ts.gen_mean,
+        ts.ctx_p95, ts.gen_p95),)
+    met_total = 0.0
+    reports = []
+    for c in classes:
+        scale = c.ctx_mean / ts.ctx_mean if ts.ctx_mean > 0 else 1.0
+        ttft_c = wait + t_pre * scale
+        disp_c = c.ctx_p95 / c.ctx_mean if c.ctx_mean > 0 else 1.0
+        ttft_p95_c = ttft_c * disp_c
+        frac = (_attained_fraction(ttft_c, ttft_p95_c,
+                                   c.slo.ttft_target_s)
+                * _attained_fraction(tpot, tpot, c.slo.tpot_target_s))
+        met = c.n * frac
+        met_total += met
+        reports.append(ClassReport(
+            name=c.slo.name, priority=c.slo.priority, num_requests=c.n,
+            ttft_mean=ttft_c, ttft_p50=ttft_c, ttft_p95=ttft_p95_c,
+            ttft_p99=ttft_p95_c,
+            tpot_mean=tpot, tpot_p50=tpot, tpot_p95=tpot, tpot_p99=tpot,
+            slo_met=int(met + 0.5),
+            goodput_rps=met / drain_s if drain_s > 0 else 0.0))
+    goodput = met_total / drain_s if drain_s > 0 else 0.0
+    return goodput, reports
+
+
 def _dispersed_report(label: str, ts: TraceSummary, ttft: float,
                       tpot: float, drain_s: float, energy: float,
                       tokens: float, peak_n: float, kv_per_req: float,
-                      capacity: int, iterations: float
-                      ) -> SimulationReport:
+                      capacity: int, iterations: float,
+                      t_pre: float = 0.0) -> SimulationReport:
     """Fold fluid means into a SimulationReport; percentile fields are
     means scaled by the trace's own length dispersion (enough to rank,
-    not a tail model)."""
+    not a tail model).  ``t_pre`` is the prefill-service floor inside
+    ``ttft`` (the rest is queueing wait shared by every class) — the
+    split the per-class goodput estimate needs."""
     ctx_disp = ts.ctx_p95 / ts.ctx_mean if ts.ctx_mean > 0 else 1.0
     gen = max(1.0, ts.gen_mean)
     ttft = max(0.0, ttft)
     tpot = max(0.0, tpot)
+    t_pre = min(max(0.0, t_pre), ttft)
     e2e_mean = ttft + tpot * max(0.0, gen - 1.0)
     e2e_p95 = ttft * ctx_disp + tpot * max(0.0, ts.gen_p95 - 1.0)
+    goodput, class_reports = _class_goodput(ts, ttft - t_pre, t_pre,
+                                            tpot, drain_s)
     return SimulationReport(
         plan_label=label,
         e2e_latency=drain_s,
@@ -183,7 +271,10 @@ def _dispersed_report(label: str, ts: TraceSummary, ttft: float,
         preemptions=0,
         peak_kv_tokens=int(min(capacity, peak_n * kv_per_req)),
         peak_batch=int(peak_n + 0.5),
-        feasible=True)
+        feasible=True,
+        ttft_p50=ttft, ttft_p99=ttft * ctx_disp,
+        tpot_p50=tpot, tpot_p99=tpot,
+        goodput_rps=goodput, class_reports=class_reports)
 
 
 class FluidSimulator:
@@ -208,13 +299,19 @@ class FluidSimulator:
     def simulate(self, requests: Sequence[Request],
                  policy: Optional[BatchingPolicy] = None,
                  keep_records: bool = False,
-                 summary: Optional[TraceSummary] = None
-                 ) -> SimulationReport:
+                 summary: Optional[TraceSummary] = None,
+                 preemption=None,
+                 slo_classes=None) -> SimulationReport:
+        # ``preemption`` is accepted for signature parity with the exact
+        # simulator and ignored: the fluid limit admits within the same
+        # KV cap instead of modeling eviction churn.
         policy = policy or BatchingPolicy()
         scheme = self.scheme
         cap = scheme.kv_token_capacity(self.plan.cluster.device.hbm_bytes)
         if cap <= 0:
             return SimulationReport.infeasible(scheme.label())
+        if summary is None:
+            requests = retag_slo(requests, slo_classes)
         ts = summary or TraceSummary.of(requests)
         if ts.n == 0:
             return SimulationReport.infeasible(scheme.label())
@@ -226,7 +323,8 @@ class FluidSimulator:
         return _dispersed_report(scheme.label(), ts, out["ttft"],
                                  out["tpot"], out["t"], out["energy"],
                                  out["tokens"], out["peak_n"] / rates.dp,
-                                 kv_per_req, cap, out["iters"])
+                                 kv_per_req, cap, out["iters"],
+                                 t_pre=rates.t_pre)
 
 
 def _integrate_colocated(r: _PoolRates, ts: TraceSummary,
@@ -368,8 +466,11 @@ class FluidDisaggSimulator:
                  keep_records: bool = False,
                  prefill_policy: Optional[BatchingPolicy] = None,
                  decode_policy: Optional[BatchingPolicy] = None,
-                 summary: Optional[TraceSummary] = None
-                 ) -> SimulationReport:
+                 summary: Optional[TraceSummary] = None,
+                 preemption=None,
+                 slo_classes=None) -> SimulationReport:
+        # ``preemption`` accepted for parity with DisaggSimulator and
+        # ignored (no eviction churn in the fluid limit)
         plan = self.plan
         pre_pol = (prefill_policy or plan.prefill_policy or policy
                    or BatchingPolicy())
@@ -386,6 +487,8 @@ class FluidDisaggSimulator:
             plan.decode_cluster.device.hbm_bytes)
         if pre_cap <= 0 or dec_cap <= 0:
             return SimulationReport.infeasible(plan.label())
+        if summary is None:
+            requests = retag_slo(requests, slo_classes)
         ts = summary or TraceSummary.of(requests)
         if ts.n == 0:
             return SimulationReport.infeasible(plan.label())
@@ -408,7 +511,8 @@ class FluidDisaggSimulator:
         return _dispersed_report(plan.label(), ts, out["ttft"],
                                  out["tpot"], out["t"], out["energy"],
                                  out["tokens"], out["peak_n"] / dec.dp,
-                                 kv_per_req, dec_cap, out["iters"])
+                                 kv_per_req, dec_cap, out["iters"],
+                                 t_pre=pre.t_pre)
 
 
 def _integrate_disagg(pre: _PoolRates, dec: _PoolRates, est,

@@ -5,13 +5,22 @@ disaggregated simulators emit (so one objective ranks both families), and
 ``percentile`` is the rank-order estimator the paper's P95 numbers use.
 Promoted out of ``simulator.py`` so the disagg subsystem no longer
 imports private helpers or re-builds the infeasible report by hand.
+
+Multi-tenant extension: every request record carries an ``SLOClass``
+(core/trace.py), so a report also breaks TTFT/TPOT percentiles out per
+class (``class_reports``) and measures **SLO goodput** — requests that
+met their own class's TTFT/TPOT targets, per second of simulated time.
+A class with no targets counts every finished request, so single-tenant
+traces degrade to plain request throughput.  ``request_metrics`` is the
+one place the latency/goodput block is computed, shared by both exact
+simulators so the two families aggregate identically.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -23,8 +32,93 @@ def percentile(xs: List[float], q: float) -> float:
     return s[min(len(s) - 1, int(math.ceil(q * len(s))) - 1)]
 
 
+def p50(xs: List[float]) -> float:
+    return percentile(xs, 0.50)
+
+
 def p95(xs: List[float]) -> float:
     return percentile(xs, 0.95)
+
+
+def p99(xs: List[float]) -> float:
+    return percentile(xs, 0.99)
+
+
+def slo_met(rec) -> bool:
+    """Did this finished request meet its own class's SLO targets?"""
+    return rec.slo_class.met_by(rec.ttft, rec.tpot, rec.gen_len > 1)
+
+
+@dataclasses.dataclass
+class ClassReport:
+    """One SLO class's slice of a simulation: latency percentiles over
+    just its requests, and how many of them met the class targets."""
+
+    name: str
+    priority: int
+    num_requests: int
+    ttft_mean: float
+    ttft_p50: float
+    ttft_p95: float
+    ttft_p99: float
+    tpot_mean: float
+    tpot_p50: float
+    tpot_p95: float
+    tpot_p99: float
+    slo_met: int                  # requests meeting their class targets
+    goodput_rps: float            # slo_met / simulated seconds
+
+    def summary(self) -> str:
+        return (f"[{self.name} p{self.priority}] n={self.num_requests} "
+                f"TTFT p50/p95/p99="
+                f"{self.ttft_p50 * 1e3:.0f}/{self.ttft_p95 * 1e3:.0f}/"
+                f"{self.ttft_p99 * 1e3:.0f}ms "
+                f"TPOT p50/p95/p99="
+                f"{self.tpot_p50 * 1e3:.1f}/{self.tpot_p95 * 1e3:.1f}/"
+                f"{self.tpot_p99 * 1e3:.1f}ms "
+                f"SLO {self.slo_met}/{self.num_requests} "
+                f"({self.goodput_rps:.2f} req/s)")
+
+
+def per_class_reports(records: Sequence, total_time: float
+                      ) -> List[ClassReport]:
+    """Group records by SLO class (highest priority first, then name)."""
+    groups: dict = {}
+    for rec in records:
+        groups.setdefault(rec.slo_class, []).append(rec)
+    out: List[ClassReport] = []
+    for slo in sorted(groups, key=lambda s: (-s.priority, s.name)):
+        recs = groups[slo]
+        ttfts = [r.ttft for r in recs]
+        tpots = [r.tpot for r in recs if r.gen_len > 1]
+        met = sum(1 for r in recs if slo_met(r))
+        out.append(ClassReport(
+            name=slo.name, priority=slo.priority, num_requests=len(recs),
+            ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            ttft_p50=p50(ttfts), ttft_p95=p95(ttfts), ttft_p99=p99(ttfts),
+            tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
+            tpot_p50=p50(tpots), tpot_p95=p95(tpots), tpot_p99=p99(tpots),
+            slo_met=met,
+            goodput_rps=met / total_time if total_time > 0 else 0.0))
+    return out
+
+
+def request_metrics(records: Sequence, total_time: float) -> dict:
+    """The latency/goodput block of a ``SimulationReport``, computed one
+    way for every exact simulator (colocated and disagg ``**`` this dict
+    into the report constructor)."""
+    ttfts = [r.ttft for r in records]
+    tpots = [r.tpot for r in records if r.gen_len > 1]
+    e2es = [r.e2e for r in records]
+    met = sum(1 for r in records if slo_met(r))
+    return dict(
+        ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        ttft_p50=p50(ttfts), ttft_p95=p95(ttfts), ttft_p99=p99(ttfts),
+        tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
+        tpot_p50=p50(tpots), tpot_p95=p95(tpots), tpot_p99=p99(tpots),
+        latency_p95=p95(e2es),
+        goodput_rps=met / total_time if total_time > 0 else 0.0,
+        class_reports=per_class_reports(records, total_time))
 
 
 @dataclasses.dataclass
@@ -43,11 +137,25 @@ class SimulationReport:
     mfu: float
     mbu: float
     iterations: int
-    preemptions: int
+    preemptions: int              # total evictions (sacrifices + swaps)
     peak_kv_tokens: int
     peak_batch: int
     feasible: bool = True
     records: Optional[list] = None
+    # latency tails beyond the paper's p95
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p50: float = 0.0
+    tpot_p99: float = 0.0
+    # preemption-mechanism split: sacrifices recompute, swaps round-trip
+    # the KV over the host link (kv_swap_s) — distinguishable in output
+    swap_outs: int = 0
+    swap_ins: int = 0
+    kv_swap_s: float = 0.0
+    kv_refetch_s: float = 0.0     # disagg decode re-fetch delay total
+    # multi-tenant SLO outcome
+    goodput_rps: float = 0.0      # requests meeting their class SLO / s
+    class_reports: Optional[List[ClassReport]] = None
 
     @classmethod
     def infeasible(cls, plan_label: str) -> "SimulationReport":
@@ -60,10 +168,35 @@ class SimulationReport:
             mfu=0, mbu=0, iterations=0, preemptions=0, peak_kv_tokens=0,
             peak_batch=0, feasible=False)
 
+    @property
+    def sacrifices(self) -> int:
+        """Evictions served by recompute (preemptions minus swap-outs)."""
+        return self.preemptions - self.swap_outs
+
     def summary(self) -> str:
-        return (f"{self.plan_label}: e2e={self.e2e_latency:.2f}s "
+        line = (f"{self.plan_label}: e2e={self.e2e_latency:.2f}s "
                 f"energy={self.total_energy / 1e3:.2f}kJ "
                 f"TTFT={self.ttft_mean * 1e3:.1f}ms "
                 f"TPOT={self.tpot_mean * 1e3:.2f}ms "
                 f"MFU={self.mfu:.2%} MBU={self.mbu:.2%} "
                 f"preempt={self.preemptions}")
+        if self.swap_outs:
+            line += (f" (swap={self.swap_outs}, "
+                     f"{self.kv_swap_s:.2f}s on host link)")
+        if self.kv_refetch_s > 0:
+            line += f" refetch={self.kv_refetch_s:.2f}s"
+        if self.goodput_rps > 0:
+            line += f" goodput={self.goodput_rps:.2f}req/s"
+        return line
+
+    def __str__(self) -> str:
+        if not self.feasible:
+            return f"{self.plan_label}: INFEASIBLE"
+        lines = [self.summary(),
+                 (f"  TTFT p50/p95/p99 = {self.ttft_p50 * 1e3:.1f}/"
+                  f"{self.ttft_p95 * 1e3:.1f}/{self.ttft_p99 * 1e3:.1f} ms"),
+                 (f"  TPOT p50/p95/p99 = {self.tpot_p50 * 1e3:.2f}/"
+                  f"{self.tpot_p95 * 1e3:.2f}/{self.tpot_p99 * 1e3:.2f} ms")]
+        for cr in self.class_reports or ():
+            lines.append("  " + cr.summary())
+        return "\n".join(lines)

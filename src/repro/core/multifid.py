@@ -39,7 +39,7 @@ from .fluid import TraceSummary
 from .metrics import SimulationReport
 from .search import (OBJECTIVES, ApexSearch, SearchResult, _call_progress,
                      fork_map)
-from .trace import Request
+from .trace import Request, retag_slo
 
 
 @dataclasses.dataclass
@@ -156,13 +156,19 @@ class MultiFidelitySearch:
                decode_policy: Optional[BatchingPolicy] = None,
                progress: Optional[Callable] = None,
                verbose: bool = False,
-               jobs: int = 1) -> MultiFidelityResult:
+               jobs: int = 1,
+               preemption=None,
+               slo_classes=None) -> MultiFidelityResult:
         """Same signature semantics as ``ApexSearch.search``; returns a
         ``MultiFidelityResult`` whose ``result`` ranks only the confirmed
         survivors (``result.all_reports`` holds one EXACT report per
-        survivor, in survivor order)."""
+        survivor, in survivor order).  ``objective="goodput"`` screens by
+        the surrogate's per-class SLO-attainment estimate (the frontier
+        always includes the top-k under every objective, goodput among
+        them) and confirms with the engine's measured goodput."""
         obj = OBJECTIVES[objective]
         inner = self.inner
+        requests = retag_slo(requests, slo_classes)
         candidates, kv_model = inner.candidates(
             quant=quant, feasible_only=feasible_only,
             max_model_dp=max_model_dp, disaggregated=disaggregated,
@@ -208,7 +214,8 @@ class MultiFidelitySearch:
             sim_kwargs = {} if cand[0] == "colocated" else {
                 "prefill_policy": prefill_policy,
                 "decode_policy": decode_policy}
-            rep = sim.simulate(requests, policy=policy, **sim_kwargs)
+            rep = sim.simulate(requests, policy=policy,
+                               preemption=preemption, **sim_kwargs)
             st = getattr(sim, "cache_stats", None) or {}
             return rep, st.get("hits", 0), st.get("misses", 0)
 

@@ -38,7 +38,7 @@ from .planner import (ParallelScheme, generate_schemes, heuristic_scheme,
 from .profiles import AnalyticBackend, CollectiveModel, ProfileBackend, \
     ProfileStore
 from .simulator import PlanSimulator, SimulationReport
-from .trace import Request
+from .trace import Request, retag_slo
 
 
 Objective = Callable[[SimulationReport], float]
@@ -49,6 +49,9 @@ OBJECTIVES = {
     "ttft": lambda r: r.ttft_p95,
     "tpot": lambda r: r.tpot_p95,
     "throughput": lambda r: -r.throughput_tok_s,   # maximize tok/s
+    # maximize requests meeting their own SLO class's targets per second
+    # (classless traces degrade to request throughput)
+    "goodput": lambda r: -r.goodput_rps,
 }
 
 # A candidate plan before simulation: family is "colocated" | "disagg",
@@ -188,11 +191,14 @@ class ApexSearch:
 
     def evaluate(self, scheme: ParallelScheme, requests: Sequence[Request],
                  policy: Optional[BatchingPolicy] = None,
-                 keep_records: bool = False) -> SimulationReport:
+                 keep_records: bool = False,
+                 preemption=None,
+                 slo_classes=None) -> SimulationReport:
         plan = map_scheme(scheme, self.cluster)
         sim = PlanSimulator(plan, self.store, self.coll)
         return sim.simulate(requests, policy=policy,
-                            keep_records=keep_records)
+                            keep_records=keep_records,
+                            preemption=preemption, slo_classes=slo_classes)
 
     def evaluate_baseline(self, requests: Sequence[Request],
                           quant: str = "fp16",
@@ -317,7 +323,9 @@ class ApexSearch:
                decode_policy: Optional[BatchingPolicy] = None,
                progress: Optional[Callable] = None,
                verbose: bool = False,
-               jobs: int = 1) -> SearchResult:
+               jobs: int = 1,
+               preemption=None,
+               slo_classes=None) -> SearchResult:
         """Rank plans under ``objective``; with ``disaggregated=True`` the
         candidate set is the union of colocated schemes and two-pool
         disaggregated schemes (disagg/), scored by the same simulator
@@ -353,9 +361,16 @@ class ApexSearch:
         are independent and each simulation is a pure function of
         (plan, requests), so the reports — and therefore the ranking —
         are identical to a serial run.
+
+        ``preemption`` selects every candidate's KV-overflow policy
+        (menu string or ``PreemptionPolicy``; None = sacrifice +
+        recent-first); ``slo_classes`` re-tags the trace's SLO classes
+        by name before simulation, so ``objective="goodput"`` ranks by
+        requests meeting their class targets per second.
         """
         t0 = _time.perf_counter()
         obj = OBJECTIVES[objective]
+        requests = retag_slo(requests, slo_classes)
         candidates, kv_model = self.candidates(
             quant=quant, feasible_only=feasible_only,
             max_model_dp=max_model_dp, disaggregated=disaggregated,
@@ -369,7 +384,8 @@ class ApexSearch:
             sim_kwargs = {} if family == "colocated" else {
                 "prefill_policy": prefill_policy,
                 "decode_policy": decode_policy}
-            rep = sim.simulate(requests, policy=policy, **sim_kwargs)
+            rep = sim.simulate(requests, policy=policy,
+                               preemption=preemption, **sim_kwargs)
             st = getattr(sim, "cache_stats", None) or {}
             return rep, st.get("hits", 0), st.get("misses", 0)
 

@@ -29,19 +29,46 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
-from .batching import BatchingPolicy
+from .batching import BatchingPolicy, SwapCost
+from .cluster import NetworkLevel, host_link
 from .engine import Engine, StepCostCache
 from .ir import Workload
 from .mapper import ExecutionPlan
-from .metrics import SimulationReport, p95
+from .metrics import SimulationReport, p95, request_metrics
 from .profiles import CollectiveModel, ProfileStore
 from .quant import get_format
 from .templates import reshard_collectives
-from .trace import Request
+from .trace import Request, retag_slo
 
 # Backwards-compatible aliases: SimulationReport and the p95 estimator
 # used to live here (core/metrics.py is their home now).
 _p95 = p95
+
+
+def default_swap_cost(scheme, link: Optional[NetworkLevel] = None,
+                      power=None) -> SwapCost:
+    """Price one victim's KV round trip over the device<->host link.
+
+    Each device of the replica swaps its own KV shard concurrently, so
+    the delay is the per-device shard's serialization time on ``link``
+    (default: the PCIe host link) — out now, back in before resumption,
+    hence the factor of two — while energy charges every device of the
+    replica at DMA-level utilization for the trip.
+    """
+    link = link or host_link()
+    per_tok = scheme.kv_bytes_per_token_per_device()
+    per_seq = scheme.state_bytes_per_seq_per_device()
+    n_dev = scheme.devices_per_replica
+
+    def cost(req: Request, kv_tokens: int):
+        nbytes = per_tok * kv_tokens + per_seq
+        t = nbytes / link.bw_per_device + link.launch_s + link.latency_s
+        roundtrip = 2.0 * t
+        energy = (power.energy(roundtrip, utilization=0.15) * n_dev
+                  if power is not None else 0.0)
+        return roundtrip, energy
+
+    return cost
 
 
 class PlanSimulator:
@@ -176,9 +203,18 @@ class PlanSimulator:
 
     def simulate(self, requests: Sequence[Request],
                  policy: Optional[BatchingPolicy] = None,
-                 keep_records: bool = False) -> SimulationReport:
+                 keep_records: bool = False,
+                 preemption=None,
+                 swap_cost: Optional[SwapCost] = None,
+                 slo_classes=None) -> SimulationReport:
+        """``preemption`` selects the KV-overflow policy (menu string or
+        ``PreemptionPolicy``; None = sacrifice + recent-first, the
+        golden-pinned default); ``swap_cost`` overrides the PCIe host-link
+        pricing the swap mechanism defaults to.  ``slo_classes`` re-tags
+        the trace's SLO classes by name (``trace.retag_slo``)."""
         policy = policy or BatchingPolicy()
         scheme = self.scheme
+        requests = retag_slo(requests, slo_classes)
         self._flops_accum = 0.0
         self._bytes_accum = 0.0
         cap = scheme.kv_token_capacity(self.plan.cluster.device.hbm_bytes)
@@ -195,7 +231,10 @@ class PlanSimulator:
         pool = engine.add_pool(
             "serve", buckets, cap, policy, cache,
             windows=self.windows,
-            is_encdec=scheme.model.encoder is not None)
+            is_encdec=scheme.model.encoder is not None,
+            preemption=preemption,
+            swap_cost=swap_cost or default_swap_cost(
+                scheme, power=self.coll.power))
         engine.run()
         results = pool.results()
         self.cache_stats = cache.stats()
@@ -207,9 +246,6 @@ class PlanSimulator:
         pool.replay_accumulators(self)
 
         records = [rec for res in results for rec in res.records]
-        ttfts = [r.ttft for r in records]
-        tpots = [r.tpot for r in records if r.gen_len > 1]
-        e2es = [r.e2e for r in records]
         total_time = max(res.total_time for res in results)
         total_energy = sum(res.total_energy for res in results)
         gen_tokens = sum(r.gen_len for r in records)
@@ -226,11 +262,6 @@ class PlanSimulator:
             plan_label=scheme.label(),
             e2e_latency=total_time,
             total_energy=total_energy,
-            ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            ttft_p95=p95(ttfts),
-            tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
-            tpot_p95=p95(tpots),
-            latency_p95=p95(e2es),
             throughput_tok_s=gen_tokens / total_time if total_time else 0.0,
             mfu=min(mfu, 1.0), mbu=min(mbu, 1.0),
             iterations=sum(r.iterations for r in results),
@@ -238,4 +269,9 @@ class PlanSimulator:
             peak_kv_tokens=max(r.peak_kv_tokens for r in results),
             peak_batch=max(r.peak_batch for r in results),
             feasible=True,
-            records=records if keep_records else None)
+            records=records if keep_records else None,
+            swap_outs=sum(r.swap_outs for r in results),
+            swap_ins=sum(r.swap_ins for r in results),
+            kv_swap_s=sum(r.kv_swap_s for r in results),
+            kv_refetch_s=sum(r.kv_refetch_s for r in results),
+            **request_metrics(records, total_time))

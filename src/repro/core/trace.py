@@ -1,4 +1,4 @@
-"""Request traces (paper §3.3, §4.1 Table 1).
+"""Request traces (paper §3.3, §4.1 Table 1) and multi-tenant SLO classes.
 
 A request = (arrival time, context length, generation length).  The paper
 derives three traces from public datasets; offline, we synthesize traces
@@ -12,6 +12,16 @@ own arrival model, §4.1):
 Lengths are drawn from a log-normal fitted to (mu, sigma) — positive,
 right-skewed, like real LLM traffic — then clamped to [1, max_len].
 Generators are seeded and deterministic.
+
+Multi-tenant traffic: every request carries an ``SLOClass`` — a named
+tenant class with a scheduling priority and optional TTFT/TPOT targets.
+``synthesize_mixed_trace`` merges independently-seeded per-class Poisson
+streams (e.g. latency-sensitive chat sharing a deployment with batchy
+summarization) into one trace; the engine's preemption policies and the
+``"goodput"`` search objective (requests meeting their class SLO per
+second) read the class off each request.  Single-class traces default to
+``DEFAULT_SLO`` (priority 0, no targets), which keeps every legacy code
+path byte-identical.
 """
 
 from __future__ import annotations
@@ -19,7 +29,31 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One tenant class: a name, a scheduling priority (higher = more
+    important — preemption policies evict lower priorities first), and
+    optional latency targets (None = unconstrained on that metric)."""
+
+    name: str = "default"
+    priority: int = 0
+    ttft_target_s: Optional[float] = None
+    tpot_target_s: Optional[float] = None
+
+    def met_by(self, ttft: float, tpot: float, has_decode: bool) -> bool:
+        """Does a request with these measured latencies meet the SLO?"""
+        if self.ttft_target_s is not None and ttft > self.ttft_target_s:
+            return False
+        if (self.tpot_target_s is not None and has_decode
+                and tpot > self.tpot_target_s):
+            return False
+        return True
+
+
+DEFAULT_SLO = SLOClass()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +63,7 @@ class Request:
     context_len: int          # prompt tokens
     gen_len: int              # output tokens to produce
     source_len: int = 0       # encoder-side tokens (enc-dec models only)
+    slo_class: SLOClass = DEFAULT_SLO
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +112,8 @@ class _GeneratorDraws:
 def synthesize_trace(spec: TraceSpec, arrival_rate: float,
                      seed: int = 0, num_requests: Optional[int] = None,
                      max_len: int = 131072, source_len: int = 0,
-                     rng=None) -> List[Request]:
+                     rng=None, slo_class: SLOClass = DEFAULT_SLO
+                     ) -> List[Request]:
     """Poisson arrivals at ``arrival_rate`` req/s, log-normal lengths.
 
     ``rng`` overrides the default seeded ``random.Random``: pass either a
@@ -86,6 +122,9 @@ def synthesize_trace(spec: TraceSpec, arrival_rate: float,
     byte-identical traces — the determinism contract parallel search
     workers (``jobs=N``) rely on when each regenerates its own copy.
     The default path is unchanged (same draws as before).
+
+    ``slo_class`` tags every request with one tenant class (see
+    ``synthesize_mixed_trace`` for multi-class traffic).
     """
     if rng is None:
         rng = random.Random(seed)
@@ -101,18 +140,95 @@ def synthesize_trace(spec: TraceSpec, arrival_rate: float,
         ctx = max(1, min(max_len, int(round(rng.lognormvariate(cmu, csig)))))
         gen = max(1, min(max_len, int(round(rng.lognormvariate(gmu, gsig)))))
         out.append(Request(rid=i, arrival=t, context_len=ctx, gen_len=gen,
-                           source_len=source_len))
+                           source_len=source_len, slo_class=slo_class))
     return out
 
 
 def get_trace(name: str, arrival_rate: float = 0.5, seed: int = 0,
               num_requests: Optional[int] = None,
-              source_len: int = 0, rng=None) -> List[Request]:
+              source_len: int = 0, rng=None,
+              slo_class: SLOClass = DEFAULT_SLO) -> List[Request]:
     if name not in TRACE_SPECS:
         raise KeyError(f"unknown trace {name!r}; known: {sorted(TRACE_SPECS)}")
     return synthesize_trace(TRACE_SPECS[name], arrival_rate, seed=seed,
                             num_requests=num_requests, source_len=source_len,
-                            rng=rng)
+                            rng=rng, slo_class=slo_class)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant traffic
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassTraffic:
+    """One tenant class's share of a mixed trace: which length
+    distribution it draws from, how fast it arrives, and its SLO."""
+
+    spec: TraceSpec
+    arrival_rate: float            # this class's own Poisson rate (req/s)
+    slo: SLOClass
+    num_requests: Optional[int] = None
+    source_len: int = 0
+
+
+def synthesize_mixed_trace(components: Sequence[ClassTraffic],
+                           seed: int = 0, max_len: int = 131072
+                           ) -> List[Request]:
+    """Merge independently-seeded per-class Poisson streams into one
+    trace (e.g. chat + summarization sharing a deployment).
+
+    Each component draws from its own sub-seeded generator
+    (``seed + 1000 * index``) so adding or re-ordering classes never
+    perturbs another class's draws; the merged trace is sorted by
+    arrival (ties by class order) and re-numbered with contiguous rids.
+    """
+    streams: List[List[Request]] = []
+    for k, comp in enumerate(components):
+        streams.append(synthesize_trace(
+            comp.spec, comp.arrival_rate, seed=seed + 1000 * k,
+            num_requests=comp.num_requests, max_len=max_len,
+            source_len=comp.source_len, slo_class=comp.slo))
+    merged = sorted(((r, k) for k, s in enumerate(streams) for r in s),
+                    key=lambda rk: (rk[0].arrival, rk[1], rk[0].rid))
+    return [dataclasses.replace(r, rid=i) for i, (r, _) in enumerate(merged)]
+
+
+def mixed_trace(components: Sequence[tuple], seed: int = 0,
+                max_len: int = 131072) -> List[Request]:
+    """Convenience front for ``synthesize_mixed_trace``: each component
+    is ``(trace_name, arrival_rate, slo_class[, num_requests])``."""
+    parts = []
+    for comp in components:
+        name, rate, slo = comp[0], comp[1], comp[2]
+        n = comp[3] if len(comp) > 3 else None
+        if name not in TRACE_SPECS:
+            raise KeyError(
+                f"unknown trace {name!r}; known: {sorted(TRACE_SPECS)}")
+        parts.append(ClassTraffic(TRACE_SPECS[name], rate, slo,
+                                  num_requests=n))
+    return synthesize_mixed_trace(parts, seed=seed, max_len=max_len)
+
+
+def retag_slo(requests: Sequence[Request],
+              slo_classes: Union[None, Dict[str, SLOClass],
+                                 Sequence[SLOClass]]) -> List[Request]:
+    """Re-attach SLO classes to a trace by class NAME.
+
+    ``slo_classes`` maps class names to replacement ``SLOClass`` objects
+    (a sequence is keyed by each class's own name).  Requests whose class
+    name has no entry keep their class; ``None`` is a no-op returning the
+    input unchanged — the single-tenant fast path.  This is the
+    ``slo_classes=`` plumbing ``simulate()``/``search()`` expose: traces
+    synthesized with bare class names can have targets attached at
+    evaluation time without regenerating the trace.
+    """
+    if slo_classes is None:
+        return list(requests) if not isinstance(requests, list) else requests
+    if not isinstance(slo_classes, dict):
+        slo_classes = {c.name: c for c in slo_classes}
+    return [dataclasses.replace(r, slo_class=slo_classes[r.slo_class.name])
+            if r.slo_class.name in slo_classes else r
+            for r in requests]
 
 
 def trace_stats(reqs: List[Request]) -> dict:

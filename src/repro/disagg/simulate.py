@@ -43,13 +43,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from ..core.batching import BatchingPolicy, RequestRecord
+from ..core.batching import BatchingPolicy, RequestRecord, SwapCost
 from ..core.engine import Engine, SharedLink, StepCostCache
 from ..core.ir import Workload
-from ..core.metrics import SimulationReport, p95
+from ..core.metrics import SimulationReport, request_metrics
 from ..core.profiles import AnalyticBackend, CollectiveModel, ProfileStore
-from ..core.simulator import PlanSimulator
-from ..core.trace import Request
+from ..core.simulator import PlanSimulator, default_swap_cost
+from ..core.trace import Request, retag_slo
 from ..serving.router import BacklogBalancer, derive_drain_rate
 from .kv_transfer import KVTransferModel
 from .pools import DisaggPlan
@@ -130,8 +130,19 @@ class DisaggSimulator:
                  decode_policy: Optional[BatchingPolicy] = None,
                  congestion: bool = True,
                  reprefill_occupancy: bool = True,
-                 link: Optional[SharedLink] = None) -> SimulationReport:
+                 link: Optional[SharedLink] = None,
+                 preemption=None,
+                 swap_cost: Optional[SwapCost] = None,
+                 slo_classes=None) -> SimulationReport:
+        """``preemption`` drives BOTH pools' KV-overflow handling (menu
+        string or ``PreemptionPolicy``; None = sacrifice + recent-first).
+        Under ``swap`` a decode-pool victim's KV parks on the host —
+        never leaving the node — so the re-prefill/re-transfer coupling
+        (``on_preempt``) fires only for sacrifice.  ``swap_cost``
+        overrides the per-pool PCIe host-link pricing; ``slo_classes``
+        re-tags the trace's SLO classes by name."""
         plan = self.plan
+        requests = retag_slo(requests, slo_classes)
         pre_pol = (prefill_policy or plan.prefill_policy or policy
                    or BatchingPolicy())
         dec_pol = (decode_policy or plan.decode_policy or policy
@@ -257,12 +268,18 @@ class DisaggSimulator:
                 refetch_delay=None if reprefill_occupancy
                 else refetch_wire_delay,
                 on_preempt=on_decode_preempt if reprefill_occupancy
-                else None)
+                else None,
+                preemption=preemption,
+                swap_cost=swap_cost or default_swap_cost(
+                    dec_s, power=self.dec_sim.coll.power))
 
         pre_pool = engine.add_pool(
             "prefill", pre_buckets, pre_cap, pre_pol, pre_cache,
             windows=self.pre_sim.windows, is_encdec=is_encdec,
-            on_finish=on_prefill_finish)
+            on_finish=on_prefill_finish,
+            preemption=preemption,
+            swap_cost=swap_cost or default_swap_cost(
+                pre_s, power=self.pre_sim.coll.power))
         if reprefill_occupancy:
             # fully coupled: one joint event loop; transfers and re-fetch
             # re-prefills flow between the pools as live events
@@ -320,8 +337,11 @@ class DisaggSimulator:
                 continue
             transfer_energy += est_of(req).energy_j
         for rec in dec_records.values():
-            if rec.preemptions:
-                transfer_energy += rec.preemptions * est_of(
+            # only sacrificed victims re-ship over the wire; a swapped
+            # victim's KV parks on the host and never crosses the link
+            sacrifices = rec.preemptions - rec.swaps
+            if sacrifices > 0:
+                transfer_energy += sacrifices * est_of(
                     by_rid[rec.rid]).energy_j
 
         # ---- merge per-request records across the two pools ----
@@ -329,21 +349,22 @@ class DisaggSimulator:
         for rid, pre_rec in sorted(pre_records.items()):
             req = by_rid[rid]
             rec = RequestRecord(rid, req.arrival, req.context_len,
-                                req.gen_len)
+                                req.gen_len, slo_class=req.slo_class)
             rec.first_token_time = pre_rec.first_token_time
             dec_rec = dec_records.get(rid)
             if dec_rec is not None:
                 rec.finish_time = dec_rec.finish_time
                 rec.preemptions = pre_rec.preemptions + dec_rec.preemptions
                 rec.refetch_s = dec_rec.refetch_s
+                rec.swaps = pre_rec.swaps + dec_rec.swaps
+                rec.swap_s = pre_rec.swap_s + dec_rec.swap_s
             else:                      # gen_len == 1: done at prefill
                 rec.finish_time = pre_rec.finish_time
                 rec.preemptions = pre_rec.preemptions
+                rec.swaps = pre_rec.swaps
+                rec.swap_s = pre_rec.swap_s
             merged.append(rec)
 
-        ttfts = [r.ttft for r in merged]
-        tpots = [r.tpot for r in merged if r.gen_len > 1]
-        e2es = [r.e2e for r in merged]
         total_time = max(res.total_time for res in results)
         total_energy = (sum(res.total_energy for res in results)
                         + transfer_energy)
@@ -367,11 +388,6 @@ class DisaggSimulator:
             plan_label=plan.label(),
             e2e_latency=total_time,
             total_energy=total_energy,
-            ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            ttft_p95=p95(ttfts),
-            tpot_mean=sum(tpots) / len(tpots) if tpots else 0.0,
-            tpot_p95=p95(tpots),
-            latency_p95=p95(e2es),
             throughput_tok_s=gen_tokens / total_time if total_time else 0.0,
             mfu=min(mfu, 1.0), mbu=min(mbu, 1.0),
             iterations=sum(r.iterations for r in results),
@@ -379,4 +395,9 @@ class DisaggSimulator:
             peak_kv_tokens=max(r.peak_kv_tokens for r in results),
             peak_batch=max(r.peak_batch for r in results),
             feasible=True,
-            records=merged if keep_records else None)
+            records=merged if keep_records else None,
+            swap_outs=sum(r.swap_outs for r in results),
+            swap_ins=sum(r.swap_ins for r in results),
+            kv_swap_s=sum(r.kv_swap_s for r in results),
+            kv_refetch_s=sum(r.kv_refetch_s for r in results),
+            **request_metrics(merged, total_time))
