@@ -8,17 +8,22 @@ root (the companion of ``BENCH_core.json``):
     candidate set (colocated + shared-cluster disagg + heterogeneous
     pool-menu disagg),
   * exact plans/s — event-engine rate on a spread sample of the same
-    candidates, giving the screening speedup ratio,
+    candidates with private caches, giving the screening speedup ratio,
   * multifid seconds — full ``MultiFidelitySearch.search`` wall time
-    (screen everything, exact-confirm the survivor frontier) for the
-    latency and throughput objectives.
+    (screen everything, successive-halving rungs on trace prefixes,
+    exact-confirm the finalists) for the latency and throughput
+    objectives, with per-rung survivor counts and rung seconds, global
+    shared-store hit rates, and a no-halving baseline for comparison.
 
     PYTHONPATH=src python benchmarks/bench_search.py [--smoke] [--verify]
-                                                     [--jobs N] [--out PATH]
+        [--jobs N] [--no-halving] [--profile] [--out PATH]
 
-``--smoke`` shrinks the workload for CI; ``--verify`` additionally runs
-the FULL exact search (minutes) and checks the exact winner survived the
-surrogate frontier for both objectives.
+``--smoke`` shrinks the workload for CI and asserts the halving path
+picks the same best plan as the no-halving path; ``--verify``
+additionally runs the FULL exact search (minutes) and checks the exact
+winner survived screening AND every halving rung for both objectives;
+``--profile`` wraps the benchmark in cProfile and prints the top-20
+cumulative functions.
 """
 
 from __future__ import annotations
@@ -51,19 +56,28 @@ def build(smoke: bool):
             pool_menu=[h100_node(8), h200_node(8),
                        h100_node(4), h200_node(4)])
         n_req = 56
-    search = ApexSearch(model, cluster)
     # loaded trace: at light load most plans tie at the arrival span and
     # the tie-aware frontier (correctly) refuses to prune — the bench
     # regime is the one where the surrogate has ranking signal
     reqs = get_trace("chat", arrival_rate=32.0, seed=0,
                      num_requests=n_req)
-    return search, reqs, search_kw
+
+    def make_search(**kw):
+        # a FRESH context per timed run: the shared step-cost store
+        # persists across search() calls, so reusing one context would
+        # flatter later runs with earlier runs' entries
+        return ApexSearch(model, cluster, **kw)
+
+    return make_search, reqs, search_kw
 
 
-def bench_rates(search, reqs, search_kw, exact_sample: int):
+def bench_rates(make_search, reqs, search_kw, exact_sample: int):
     """Surrogate plans/s over ALL candidates vs exact plans/s on a
-    spread sample (the full exact sweep is what multifid avoids)."""
+    spread sample (the full exact sweep is what multifid avoids).  Both
+    run with private per-simulator caches so the rates stay comparable
+    across benchmark revisions."""
     from repro.core.fluid import TraceSummary
+    search = make_search(share_step_costs=False)
     cands, kv = search.candidates(**search_kw)
     ts = TraceSummary.of(reqs)
     t0 = time.perf_counter()
@@ -91,92 +105,172 @@ def bench_rates(search, reqs, search_kw, exact_sample: int):
     }
 
 
-def bench_multifid(search, reqs, search_kw, objective: str, jobs: int):
+def bench_multifid(make_search, reqs, search_kw, objective: str,
+                   jobs: int, halving: bool):
+    search = make_search()
     mf = MultiFidelitySearch(search)
     t0 = time.perf_counter()
-    res = mf.search(reqs, objective=objective, jobs=jobs, **search_kw)
+    res = mf.search(reqs, objective=objective, jobs=jobs,
+                    halving=halving, **search_kw)
     dt = time.perf_counter() - t0
-    return res, {
+    traffic = res.result.cache_hits + res.result.cache_misses
+    row = {
         "objective": objective,
+        "halving": halving,
         "num_candidates": res.num_candidates,
-        "num_survivors": res.num_survivors,
+        "screen_survivors": res.screen_survivors,
+        "num_finalists": res.num_survivors,
         "screen_seconds": round(res.screen_seconds, 3),
         "confirm_seconds": round(res.confirm_seconds, 3),
         "total_seconds": round(dt, 3),
+        "rungs": [{
+            "fraction": r.fraction,
+            "n_requests": r.n_requests,
+            "evaluated": r.evaluated,
+            "promoted": r.promoted,
+            "seconds": round(r.seconds, 3),
+            "cache_hits": r.cache_hits,
+            "cache_misses": r.cache_misses,
+        } for r in res.rungs],
+        "cache_hits": res.result.cache_hits,
+        "cache_misses": res.result.cache_misses,
+        "cache_hit_rate": round(res.result.cache_hits / traffic, 3)
+        if traffic else 0.0,
+        "cost_store": search.cost_store.stats()
+        if search.cost_store is not None else None,
         "best": res.best.plan_label,
+    }
+    return res, row
+
+
+def run_benchmark(args):
+    make_search, reqs, search_kw = build(args.smoke)
+    rates = bench_rates(make_search, reqs, search_kw,
+                        exact_sample=4 if args.smoke else 8)
+    searches = {}
+    baselines = {}
+    mf_results = {}
+    for objective in ("latency", "throughput"):
+        res, row = bench_multifid(make_search, reqs, search_kw, objective,
+                                  args.jobs, halving=not args.no_halving)
+        searches[objective] = row
+        mf_results[objective] = res
+        if not args.no_halving:
+            # no-halving baseline: every screening survivor pays the
+            # full trace (the PR 4 confirm path), for the ladder-vs-
+            # cliff comparison recorded below
+            _, base_row = bench_multifid(make_search, reqs, search_kw,
+                                         objective, args.jobs,
+                                         halving=False)
+            baselines[objective] = base_row
+            if args.smoke:
+                assert row["best"] == base_row["best"], (
+                    f"[{objective}] halving best {row['best']!r} != "
+                    f"no-halving best {base_row['best']!r}")
+
+    verify = None
+    if args.verify:
+        verify = {}
+        for objective in ("latency", "throughput"):
+            exact = make_search().search(reqs, objective=objective,
+                                         jobs=args.jobs, **search_kw)
+            mres = mf_results[objective]
+            label = exact.best.plan_label
+            survived = {mres.surrogate_reports[i].plan_label
+                        for i in mres.survivor_indices}
+            rungs_ok = all(
+                label in {mres.surrogate_reports[i].plan_label
+                          for i in r.survivor_indices}
+                for r in mres.rungs)
+            verify[objective] = {
+                "exact_best": label,
+                "exact_seconds": round(exact.search_seconds, 3),
+                "winner_survived": label in survived and rungs_ok,
+                "winner_survived_every_rung": rungs_ok,
+            }
+
+    return {
+        "bench": "bench_search",
+        "smoke": args.smoke,
+        "jobs": args.jobs,
+        "halving": not args.no_halving,
+        "n_requests": len(reqs),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "rates": rates,
+        "multifid": searches,
+        "multifid_no_halving": baselines or None,
+        "verify": verify,
     }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizing for CI (seconds, not minutes)")
+                    help="tiny sizing for CI (seconds, not minutes); "
+                         "asserts halving and no-halving agree on the "
+                         "best plan")
     ap.add_argument("--verify", action="store_true",
                     help="also run the full exact search and check the "
-                         "exact winner survived the surrogate frontier")
+                         "exact winner survived screening and every "
+                         "halving rung")
     ap.add_argument("--jobs", type=int, default=1,
                     help="forked workers for exact confirmation")
+    ap.add_argument("--no-halving", action="store_true",
+                    help="disable successive halving (PR 4 behavior: "
+                         "every screening survivor runs the full trace)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in cProfile and print the top-20 "
+                         "cumulative functions")
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args()
 
-    search, reqs, search_kw = build(args.smoke)
-    rates = bench_rates(search, reqs, search_kw,
-                        exact_sample=4 if args.smoke else 8)
-    searches = {}
-    mf_results = {}
-    for objective in ("latency", "throughput"):
-        res, row = bench_multifid(search, reqs, search_kw, objective,
-                                  args.jobs)
-        searches[objective] = row
-        mf_results[objective] = res
+    if args.profile:
+        import cProfile
+        import pstats
+        prof = cProfile.Profile()
+        prof.enable()
+        out = run_benchmark(args)
+        prof.disable()
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(20)
+    else:
+        out = run_benchmark(args)
 
-    verify = None
-    if args.verify:
-        verify = {}
-        for objective in ("latency", "throughput"):
-            exact = search.search(reqs, objective=objective,
-                                  jobs=args.jobs, **search_kw)
-            mres = mf_results[objective]
-            survived = {mres.surrogate_reports[i].plan_label
-                        for i in mres.survivor_indices}
-            verify[objective] = {
-                "exact_best": exact.best.plan_label,
-                "exact_seconds": round(exact.search_seconds, 3),
-                "winner_survived": exact.best.plan_label in survived,
-            }
-
-    out = {
-        "bench": "bench_search",
-        "smoke": args.smoke,
-        "jobs": args.jobs,
-        "n_requests": len(reqs),
-        "python": platform.python_version(),
-        "machine": platform.machine(),
-        "rates": rates,
-        "multifid": searches,
-        "verify": verify,
-    }
     path = args.out or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_search.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
 
-    r = rates
+    r = out["rates"]
     print(f"candidates: {r['num_candidates']}")
     print(f"surrogate: {r['surrogate_plans_per_sec']} plans/s, "
           f"exact: {r['exact_plans_per_sec']} plans/s "
           f"-> {r['speedup_ratio']}x")
-    for objective, row in searches.items():
-        print(f"multifid[{objective}]: {row['num_candidates']} -> "
-              f"{row['num_survivors']} survivors in "
-              f"{row['total_seconds']}s (best {row['best']})")
-    if verify:
-        for objective, v in verify.items():
+    for objective, row in out["multifid"].items():
+        ladder = " -> ".join(
+            [str(row["screen_survivors"])]
+            + [f"{rg['promoted']}@{rg['fraction']:.0%}"
+               for rg in row["rungs"]])
+        print(f"multifid[{objective}]: {row['num_candidates']} cands, "
+              f"ladder {ladder}, confirm {row['confirm_seconds']}s, "
+              f"total {row['total_seconds']}s, "
+              f"hit rate {row['cache_hit_rate']:.0%} (best {row['best']})")
+        base = (out.get("multifid_no_halving") or {}).get(objective)
+        if base:
+            speedup = (base["confirm_seconds"] / row["confirm_seconds"]
+                       if row["confirm_seconds"] > 0 else float("inf"))
+            print(f"  no-halving baseline: confirm "
+                  f"{base['confirm_seconds']}s -> {speedup:.1f}x ladder "
+                  f"speedup (same best: "
+                  f"{base['best'] == row['best']})")
+    if out["verify"]:
+        for objective, v in out["verify"].items():
             print(f"verify[{objective}]: exact best in "
                   f"{v['exact_seconds']}s, survived="
-                  f"{v['winner_survived']}")
-    print(f"wrote {path}")
+                  f"{v['winner_survived']} "
+                  f"(every rung: {v['winner_survived_every_rung']})")
+    print(f"wrote {out and path}")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,9 @@ planning for LLM serving via dynamism-aware simulation."""
 
 from .batching import BatchingModule, BatchingPolicy, BatchingResult
 from .engine import (ContinuousScheduler, Engine, PreemptionPolicy,
-                     SacrificePolicy, SchedulerPolicy, SharedLink,
-                     StaticScheduler, StepCostCache, SwapPolicy,
-                     make_preemption)
+                     SacrificePolicy, SchedulerPolicy, SharedCostStore,
+                     SharedLink, StaticScheduler, StepCostCache,
+                     SwapPolicy, make_preemption)
 from .metrics import ClassReport, p50, p95, p99, percentile
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
                       cpu_local, cross_pool_link, get_cluster,
@@ -20,15 +20,16 @@ from .planner import (ParallelScheme, divisors, generate_schemes,
 from .profiles import AnalyticBackend, CollectiveModel, MeasuredBackend, \
     ProfileBackend, ProfileStore
 from .fluid import FluidDisaggSimulator, FluidSimulator, TraceSummary
-from .multifid import MultiFidelityResult, MultiFidelitySearch
+from .multifid import MultiFidelityResult, MultiFidelitySearch, RungStat
 from .quant import FORMATS, QuantFormat, get_format, register_format
 from .search import ApexSearch, SearchResult, compare_three_plans, fork_map
-from .simulator import PlanSimulator, SimulationReport
+from .simulator import PlanSimulator, SimulationReport, cost_fingerprint
 from .templates import CellScheme, CollectiveCall, reshard_collectives, \
     schemes_for_cell
 from .trace import (DEFAULT_SLO, ClassTraffic, Request, SLOClass,
-                    TRACE_SPECS, get_trace, mixed_trace, retag_slo,
-                    synthesize_mixed_trace, synthesize_trace, trace_stats)
+                    TRACE_SPECS, get_trace, mixed_trace, prefix_trace,
+                    retag_slo, synthesize_mixed_trace, synthesize_trace,
+                    trace_stats)
 
 __all__ = [
     "ApexSearch", "AnalyticBackend", "AttentionCell", "BatchingModule",
@@ -39,18 +40,18 @@ __all__ = [
     "DeviceSpec", "Engine",
     "ExecutionPlan", "FORMATS", "FluidDisaggSimulator", "FluidSimulator",
     "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
-    "MultiFidelityResult", "MultiFidelitySearch",
+    "MultiFidelityResult", "MultiFidelitySearch", "RungStat",
     "NetworkLevel", "OpCall", "PreemptionPolicy", "SLOClass",
-    "TraceSummary", "cpu_local", "fork_map",
+    "TraceSummary", "cost_fingerprint", "cpu_local", "fork_map",
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
     "QuantFormat", "Request", "SSMCell", "SacrificePolicy",
     "SchedulerPolicy", "SearchResult",
-    "SharedLink", "SimulationReport", "StaticScheduler", "StepCostCache",
-    "SwapPolicy",
+    "SharedCostStore", "SharedLink", "SimulationReport", "StaticScheduler",
+    "StepCostCache", "SwapPolicy",
     "TRACE_SPECS", "Workload", "assign_physical_ids", "compare_three_plans",
     "cross_pool_link", "divisors", "generate_schemes", "get_cluster",
     "get_format", "get_trace", "host_link", "make_preemption",
-    "mixed_trace", "p50", "p95", "p99", "percentile",
+    "mixed_trace", "p50", "p95", "p99", "percentile", "prefix_trace",
     "h100_multinode", "h100_node", "h200_node", "heuristic_scheme",
     "ir_from_hf_config", "map_scheme", "prefilter_schemes",
     "register_format", "retag_slo",

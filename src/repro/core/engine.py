@@ -49,6 +49,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .batching import (BatchingPolicy, BatchingResult, RefetchDelay,
@@ -67,6 +68,42 @@ _PRIO_ITER_END = 2
 # step-cost memoization
 # ---------------------------------------------------------------------------
 
+# A day-long trace at ~10 req/s with per-request workload churn produces
+# on the order of 10^5 distinct workload signatures per plan family; the
+# default bound comfortably holds several searches' worth of tables while
+# capping worst-case memory at a few hundred MB (entries are small
+# tuples).  Override per cache/store when profiling long traces.
+DEFAULT_COST_CACHE_SIZE = 200_000
+
+
+class _CostTable(OrderedDict):
+    """Bounded LRU map from ``Workload.signature()`` to cost entries.
+
+    Plain ``OrderedDict`` with an eviction counter: lookups that hit
+    refresh recency, inserts past ``maxsize`` evict the least recently
+    used entry.  Shared by every ``StepCostCache`` view onto the same
+    plan-fingerprint bucket of a ``SharedCostStore``.
+    """
+
+    def __init__(self, maxsize: int = DEFAULT_COST_CACHE_SIZE):
+        super().__init__()
+        self.maxsize = maxsize
+        self.evictions = 0
+
+    def lookup(self, key: tuple) -> Optional[tuple]:
+        ent = self.get(key)
+        if ent is not None:
+            self.move_to_end(key)
+        return ent
+
+    def store(self, key: tuple, ent: tuple) -> None:
+        self[key] = ent
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            self.popitem(last=False)
+            self.evictions += 1
+
+
 class StepCostCache:
     """Memoized (time, energy) lookups on the engine's cost boundary.
 
@@ -75,12 +112,22 @@ class StepCostCache:
     ``_last_inc``); the cache stores that increment with the hit entry so
     utilization accounting can be replayed in deterministic replica order
     after the run — identical whether or not a workload hit the cache.
+
+    The backing ``table`` may be private (default) or a ``_CostTable``
+    handed in by a ``SharedCostStore``, in which case entries priced by
+    one simulator are visible to every later simulator with the same
+    cost-model fingerprint.  Hit/miss counters are always per-view, so
+    ``stats()`` still describes *this* run; ``entries``/``evictions``
+    describe the backing table.
     """
 
-    def __init__(self, step_cost: StepCost, owner=None):
+    def __init__(self, step_cost: StepCost, owner=None,
+                 maxsize: int = DEFAULT_COST_CACHE_SIZE,
+                 table: Optional[_CostTable] = None):
         self.step_cost = step_cost
         self.owner = owner
-        self.table: Dict[tuple, tuple] = {}
+        self.table: _CostTable = table if table is not None \
+            else _CostTable(maxsize)
         self.hits = 0
         self.misses = 0
 
@@ -88,7 +135,8 @@ class StepCostCache:
         """Hit/miss counters for cost-reuse observability (reported by
         the search as per-plan aggregates and by bench_core.py)."""
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self.table)}
+                "entries": len(self.table),
+                "evictions": self.table.evictions}
 
     def reset_stats(self) -> None:
         self.hits = 0
@@ -97,17 +145,66 @@ class StepCostCache:
     def cost(self, w: Workload) -> tuple:
         """(time_s, energy_j, (flops_inc, bytes_inc)) for one iteration."""
         key = w.signature()
-        ent = self.table.get(key)
+        ent = self.table.lookup(key)
         if ent is None:
             t, e = self.step_cost(w)
             inc = getattr(self.owner, "_last_inc", (0.0, 0.0)) \
                 if self.owner is not None else (0.0, 0.0)
             ent = (t, e, inc)
-            self.table[key] = ent
+            self.table.store(key, ent)
             self.misses += 1
         else:
             self.hits += 1
         return ent
+
+
+class SharedCostStore:
+    """Cross-plan step-cost store, keyed by cost-model fingerprint.
+
+    Candidate plans in a search overwhelmingly share per-stage schemes —
+    e.g. every ``model_dp`` width of one layout prices iterations
+    identically — so a search-scoped store lets the thousands of
+    identical decode-step workloads recurring across sibling candidates
+    be priced once per search instead of once per plan.  Two levels keep
+    the hot path cheap: a simulator resolves its fingerprint to a
+    ``_CostTable`` once, then per-step lookups hash only the workload
+    signature.
+
+    Fingerprints (``core.simulator.cost_fingerprint``) cover everything
+    ``iteration_cost`` reads — scheme layout, quant format, cluster
+    device/network specs, profile-backend knobs — so plans that differ
+    in any cost-relevant way can never share a bucket (tested
+    adversarially in tests/test_halving.py).
+
+    With ``search(jobs=N)`` the store is pre-seeded in the parent (by
+    fluid screening probes and any earlier runs) and each forked worker
+    inherits that snapshot copy-on-write; entries priced inside a worker
+    stay in the worker.  Costs are deterministic functions of the
+    fingerprint+signature key, so sharing never changes results — only
+    how often ``step_cost`` is re-run.
+    """
+
+    def __init__(self, maxsize: int = DEFAULT_COST_CACHE_SIZE):
+        self.maxsize = maxsize
+        self.tables: Dict[tuple, _CostTable] = {}
+
+    def table(self, fingerprint: tuple) -> _CostTable:
+        tab = self.tables.get(fingerprint)
+        if tab is None:
+            tab = self.tables[fingerprint] = _CostTable(self.maxsize)
+        return tab
+
+    def cache(self, fingerprint: tuple, step_cost: StepCost,
+              owner=None) -> StepCostCache:
+        """A per-run ``StepCostCache`` view onto this store's table for
+        ``fingerprint`` (fresh hit/miss counters, shared entries)."""
+        return StepCostCache(step_cost, owner=owner,
+                             table=self.table(fingerprint))
+
+    def stats(self) -> Dict[str, int]:
+        return {"tables": len(self.tables),
+                "entries": sum(len(t) for t in self.tables.values()),
+                "evictions": sum(t.evictions for t in self.tables.values())}
 
 
 # ---------------------------------------------------------------------------

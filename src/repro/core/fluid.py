@@ -45,13 +45,13 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 from .batching import BatchingPolicy
-from .engine import StepCostCache
+from .engine import SharedCostStore, StepCostCache
 from .ir import Workload
 from .mapper import ExecutionPlan
 from .metrics import ClassReport, SimulationReport, percentile
 from .profiles import CollectiveModel, ProfileStore
 from .simulator import PlanSimulator
-from .trace import DEFAULT_SLO, Request, SLOClass, retag_slo
+from .trace import DEFAULT_SLO, Request, SLOClass, prefix_trace, retag_slo
 
 # engine Pool default — the surrogate's sequence-slot cap must match
 _MAX_SEQUENCES = 512
@@ -120,6 +120,25 @@ class TraceSummary:
             gen_p95=float(percentile([float(g) for g in gens], 0.95)),
             source_mean=sum(r.source_len for r in requests) / n,
             classes=tuple(classes))
+
+    @classmethod
+    def of_prefixes(cls, requests: Sequence[Request],
+                    fractions: Sequence[float]) -> dict:
+        """Summaries of count-prefixes of ``requests``: maps each fraction
+        in ``fractions`` (plus 1.0, the full trace) to the summary of the
+        first ``ceil(f * n)`` requests by arrival, sharing one sort.
+
+        The first k arrivals of a Poisson process are themselves a Poisson
+        sample over a shorter window (arrival times kept absolute — see
+        ``trace.prefix_trace``), so prefix summaries preserve the
+        arrival-rate and length statistics the fluid model and the
+        halving rungs consume.
+        """
+        ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        out = {}
+        for f in set(fractions) | {1.0}:
+            out[f] = cls.of(prefix_trace(ordered, f, presorted=True))
+        return out
 
 
 @dataclasses.dataclass
@@ -289,11 +308,12 @@ class FluidSimulator:
     steps: int = 48           # Euler steps over the arrival window
 
     def __init__(self, plan: ExecutionPlan, store: ProfileStore,
-                 coll: CollectiveModel):
+                 coll: CollectiveModel,
+                 cost_store: Optional[SharedCostStore] = None):
         self.plan = plan
         self.scheme = plan.scheme
-        self.sim = PlanSimulator(plan, store, coll)
-        self.cache = StepCostCache(self.sim.iteration_cost, owner=self.sim)
+        self.sim = PlanSimulator(plan, store, coll, cost_store=cost_store)
+        self.cache = self.sim.cost_cache()
         self.cache_stats = {"hits": 0, "misses": 0}
 
     def simulate(self, requests: Sequence[Request],
@@ -448,17 +468,17 @@ class FluidDisaggSimulator:
 
     def __init__(self, plan, store: ProfileStore, coll: CollectiveModel,
                  kv_model=None, decode_store: Optional[ProfileStore] = None,
-                 decode_coll: Optional[CollectiveModel] = None):
+                 decode_coll: Optional[CollectiveModel] = None,
+                 cost_store: Optional[SharedCostStore] = None):
         from ..disagg.simulate import DisaggSimulator
         self.exact = DisaggSimulator(plan, store, coll, kv_model,
                                      decode_store=decode_store,
-                                     decode_coll=decode_coll)
+                                     decode_coll=decode_coll,
+                                     cost_store=cost_store)
         self.plan = plan
         self.scheme = plan.scheme
-        self.pre_cache = StepCostCache(self.exact.pre_sim.iteration_cost,
-                                       owner=self.exact.pre_sim)
-        self.dec_cache = StepCostCache(self.exact.dec_sim.iteration_cost,
-                                       owner=self.exact.dec_sim)
+        self.pre_cache = self.exact.pre_sim.cost_cache()
+        self.dec_cache = self.exact.dec_sim.cost_cache()
         self.cache_stats = {"hits": 0, "misses": 0}
 
     def simulate(self, requests: Sequence[Request],
@@ -506,7 +526,7 @@ class FluidDisaggSimulator:
         out = _integrate_disagg(pre, dec, est, ts, self.steps)
         self.cache_stats = {
             k: self.pre_cache.stats()[k] + self.dec_cache.stats()[k]
-            for k in ("hits", "misses", "entries")}
+            for k in ("hits", "misses", "entries", "evictions")}
         kv_per_req = ts.ctx_mean + ts.gen_mean / 2.0
         return _dispersed_report(plan.label(), ts, out["ttft"],
                                  out["tpot"], out["t"], out["energy"],

@@ -35,6 +35,7 @@ from .ir import ModelIR
 from .mapper import ExecutionPlan, map_scheme
 from .planner import (ParallelScheme, generate_schemes, heuristic_scheme,
                       prefilter_schemes)
+from .engine import SharedCostStore
 from .profiles import AnalyticBackend, CollectiveModel, ProfileBackend, \
     ProfileStore
 from .simulator import PlanSimulator, SimulationReport
@@ -74,32 +75,41 @@ def _fork_call(i: int):
     return _FORK_WORK["fn"](i)
 
 
+def _serial_map(fn: Callable[[int], object], n: int,
+                progress: Optional[Callable[[int], None]] = None) -> list:
+    out = []
+    for i in range(n):
+        out.append(fn(i))
+        if progress:
+            progress(i + 1)
+    return out
+
+
 def fork_map(fn: Callable[[int], object], n: int, jobs: int,
              progress: Optional[Callable[[int], None]] = None) -> list:
     """``[fn(i) for i in range(n)]`` across ``jobs`` forked processes.
 
     Falls back to the serial loop when ``jobs <= 1``, there is nothing
     to parallelize, or the platform has no fork (the only start method
-    that inherits the closure without pickling it).  Results come back
+    that inherits the closure without pickling it).  Spawn-only
+    platforms (Windows, some macOS configurations) get the serial
+    fallback with a warning rather than a crash.  Results come back
     in index order, so callers see exactly the serial sequence.
     """
     if jobs <= 1 or n <= 1:
-        out = []
-        for i in range(n):
-            out.append(fn(i))
-            if progress:
-                progress(i + 1)
-        return out
+        return _serial_map(fn, n, progress)
     import multiprocessing as mp
+    if "fork" not in mp.get_all_start_methods():
+        import warnings
+        warnings.warn(
+            "search(jobs=N) needs the 'fork' start method, which this "
+            "platform does not offer; evaluating serially instead",
+            RuntimeWarning, stacklevel=2)
+        return _serial_map(fn, n, progress)
     try:
         ctx = mp.get_context("fork")
     except ValueError:
-        out = []
-        for i in range(n):
-            out.append(fn(i))
-            if progress:
-                progress(i + 1)
-        return out
+        return _serial_map(fn, n, progress)
     _FORK_WORK["fn"] = fn
     try:
         with ctx.Pool(min(jobs, n)) as pool:
@@ -165,7 +175,8 @@ class ApexSearch:
     def __init__(self, model: ModelIR, cluster: Cluster,
                  backend: Optional[ProfileBackend] = None,
                  freq_ghz: Optional[float] = None,
-                 grid_stride: int = 1):
+                 grid_stride: int = 1,
+                 share_step_costs: bool = True):
         self.model = model
         self.cluster = cluster
         self.freq_ghz = freq_ghz
@@ -173,6 +184,13 @@ class ApexSearch:
         self.backend = backend or AnalyticBackend(cluster, freq_ghz=freq_ghz)
         self.store = ProfileStore(self.backend, grid_stride=grid_stride)
         self.coll = CollectiveModel(cluster, freq_ghz=freq_ghz)
+        # search-scoped cross-plan step-cost store: candidates with equal
+        # cost fingerprints (e.g. DP widths of one layout) price each
+        # workload once per SEARCH instead of once per plan; it persists
+        # across search() calls on this context, like ProfileStore does.
+        # share_step_costs=False restores fully private per-simulator
+        # caches (results are bit-identical either way — tested).
+        self.cost_store = SharedCostStore() if share_step_costs else None
         # per-pool-cluster cost models for heterogeneous disagg candidates
         self._pool_ctx: dict = {}
 
@@ -195,7 +213,8 @@ class ApexSearch:
                  preemption=None,
                  slo_classes=None) -> SimulationReport:
         plan = map_scheme(scheme, self.cluster)
-        sim = PlanSimulator(plan, self.store, self.coll)
+        sim = PlanSimulator(plan, self.store, self.coll,
+                            cost_store=self.cost_store)
         return sim.simulate(requests, policy=policy,
                             keep_records=keep_records,
                             preemption=preemption, slo_classes=slo_classes)
@@ -280,12 +299,15 @@ class ApexSearch:
         two fidelities disagree only on dynamics, never on step costs.
         """
         family, scheme, pools = candidate
+        cs = self.cost_store
         if family == "colocated":
             plan = map_scheme(scheme, self.cluster)
             if fluid:
                 from .fluid import FluidSimulator
-                return plan, FluidSimulator(plan, self.store, self.coll)
-            return plan, PlanSimulator(plan, self.store, self.coll)
+                return plan, FluidSimulator(plan, self.store, self.coll,
+                                            cost_store=cs)
+            return plan, PlanSimulator(plan, self.store, self.coll,
+                                       cost_store=cs)
         from ..disagg import DisaggSimulator, map_disagg_scheme
         if fluid:
             from .fluid import FluidDisaggSimulator
@@ -294,14 +316,16 @@ class ApexSearch:
             sim_cls = DisaggSimulator
         if pools is None:
             plan = map_disagg_scheme(scheme, self.cluster)
-            return plan, sim_cls(plan, self.store, self.coll, kv_model)
+            return plan, sim_cls(plan, self.store, self.coll, kv_model,
+                                 cost_store=cs)
         pre_c, dec_c = pools
         plan = map_disagg_scheme(scheme, prefill_cluster=pre_c,
                                  decode_cluster=dec_c)
         pre_store, pre_coll = self._pool_cost_models(pre_c)
         dec_store, dec_coll = self._pool_cost_models(dec_c)
         return plan, sim_cls(plan, pre_store, pre_coll,
-                             decode_store=dec_store, decode_coll=dec_coll)
+                             decode_store=dec_store, decode_coll=dec_coll,
+                             cost_store=cs)
 
     # -- full search --------------------------------------------------------------
 

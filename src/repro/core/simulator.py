@@ -31,7 +31,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from .batching import BatchingPolicy, SwapCost
 from .cluster import NetworkLevel, host_link
-from .engine import Engine, StepCostCache
+from .engine import Engine, SharedCostStore, StepCostCache
 from .ir import Workload
 from .mapper import ExecutionPlan
 from .metrics import SimulationReport, p95, request_metrics
@@ -71,25 +71,79 @@ def default_swap_cost(scheme, link: Optional[NetworkLevel] = None,
     return cost
 
 
+def _cluster_key(cluster) -> tuple:
+    """A ``Cluster`` as a hashable tuple (``DeviceSpec.peak_flops`` is a
+    dict, so the dataclass itself cannot key a table).  Covers every
+    field the profile and collective models read: device rates/power and
+    all interconnect levels."""
+    d = cluster.device
+    return (cluster.name, cluster.num_devices, cluster.levels,
+            d.name, tuple(sorted(d.peak_flops.items())), d.hbm_bytes,
+            d.hbm_bw, d.idle_power_w, d.peak_power_w, d.base_freq_ghz)
+
+
+def cost_fingerprint(plan: ExecutionPlan, store: ProfileStore,
+                     coll: CollectiveModel) -> tuple:
+    """Everything ``PlanSimulator.iteration_cost`` reads, as a hashable key.
+
+    Two plans with equal fingerprints price every workload identically, so
+    they may share one ``SharedCostStore`` table.  The fingerprint covers
+    the per-stage scheme layout (cells, sharding, blocks-per-stage via
+    ``pp_stages``), the quant format, the cluster (device + network specs
+    feed both ``ProfileStore.query`` and ``CollectiveModel.query``), the
+    pipeline span, and the profile-backend knobs.  It deliberately
+    EXCLUDES ``model_dp``: replicas of the same layout run identical
+    iterations, and sharing across DP widths is the big cross-plan win.
+    All components are frozen dataclasses, so equality is structural.
+    """
+    scheme = plan.scheme
+    return (scheme.model, scheme.pp_stages, scheme.cell_schemes,
+            scheme.quant, plan.stage_span,
+            tuple(g.span for g in plan.cell_groups),
+            _cluster_key(plan.cluster),
+            getattr(store.backend, "freq_ghz", None), store.grid_stride)
+
+
 class PlanSimulator:
     """Costs one ExecutionPlan's iterations and runs full-trace simulations."""
 
     def __init__(self, plan: ExecutionPlan, store: ProfileStore,
-                 coll: CollectiveModel):
+                 coll: CollectiveModel,
+                 cost_store: Optional[SharedCostStore] = None):
         self.plan = plan
         self.store = store
         self.coll = coll
+        self.cost_store = cost_store
+        self._fingerprint: Optional[tuple] = None
         self.scheme = plan.scheme
         self.q = get_format(self.scheme.quant)
         self._flops_accum = 0.0
         self._bytes_accum = 0.0
         self._last_inc = (0.0, 0.0)   # per-call accumulator increment
         # last simulate()'s StepCostCache counters (cost-reuse telemetry)
-        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0}
+        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0,
+                            "evictions": 0}
         # distinct attention windows in the model (for Workload building)
         self.windows = sorted(
             {getattr(c, "window", None) for c in self.scheme.model.block.cells},
             key=lambda w: (w is None, w))
+
+    def fingerprint(self) -> tuple:
+        """This plan's cost-model fingerprint (computed once, cached —
+        hashing the scheme's cell tree is not free on the hot path)."""
+        if self._fingerprint is None:
+            self._fingerprint = cost_fingerprint(self.plan, self.store,
+                                                 self.coll)
+        return self._fingerprint
+
+    def cost_cache(self) -> StepCostCache:
+        """A fresh ``StepCostCache`` for one run: a view onto the shared
+        store's fingerprint table when one was provided, private
+        otherwise (direct ``PlanSimulator`` use stays golden-identical)."""
+        if self.cost_store is not None:
+            return self.cost_store.cache(self.fingerprint(),
+                                         self.iteration_cost, owner=self)
+        return StepCostCache(self.iteration_cost, owner=self)
 
     # -- per-iteration cost (the engine's step_cost callback) -----------------
 
@@ -227,7 +281,7 @@ class PlanSimulator:
             buckets[i % scheme.model_dp].append(r)
 
         engine = Engine()
-        cache = StepCostCache(self.iteration_cost, owner=self)
+        cache = self.cost_cache()
         pool = engine.add_pool(
             "serve", buckets, cap, policy, cache,
             windows=self.windows,

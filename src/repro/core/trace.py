@@ -231,6 +231,31 @@ def retag_slo(requests: Sequence[Request],
             for r in requests]
 
 
+def prefix_trace(requests: Sequence[Request], fraction: float,
+                 presorted: bool = False) -> List[Request]:
+    """The first ``ceil(fraction * n)`` requests of a trace, by arrival.
+
+    Used by successive-halving rungs (``core/multifid.py``): a short
+    prefix of the trace is a cheap but *exact* fidelity level.  The
+    prefix is taken by COUNT with arrival times kept absolute, because
+    the first k arrivals of a Poisson process are themselves a Poisson
+    process observed over a shorter window — rate, length distributions
+    and SLO-class mix are preserved in expectation, so rung rankings are
+    unbiased estimates of the full-trace ranking.  Ties on arrival break
+    by ``rid`` so the prefix is deterministic.  ``fraction >= 1`` returns
+    the (sorted) full trace; ``presorted`` skips the sort when the caller
+    already ordered by ``(arrival, rid)``.
+    """
+    if fraction <= 0:
+        raise ValueError(f"prefix fraction must be positive, got {fraction}")
+    ordered = list(requests) if presorted else \
+        sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if fraction >= 1.0:
+        return ordered
+    k = max(1, math.ceil(len(ordered) * fraction))
+    return ordered[:k]
+
+
 def trace_stats(reqs: List[Request]) -> dict:
     n = len(reqs)
     cm = sum(r.context_len for r in reqs) / n

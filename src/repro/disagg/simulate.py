@@ -44,7 +44,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from ..core.batching import BatchingPolicy, RequestRecord, SwapCost
-from ..core.engine import Engine, SharedLink, StepCostCache
+from ..core.engine import Engine, SharedCostStore, SharedLink
 from ..core.ir import Workload
 from ..core.metrics import SimulationReport, request_metrics
 from ..core.profiles import AnalyticBackend, CollectiveModel, ProfileStore
@@ -69,7 +69,8 @@ class DisaggSimulator:
                  coll: CollectiveModel,
                  kv_model: Optional[KVTransferModel] = None,
                  decode_store: Optional[ProfileStore] = None,
-                 decode_coll: Optional[CollectiveModel] = None):
+                 decode_coll: Optional[CollectiveModel] = None,
+                 cost_store: Optional[SharedCostStore] = None):
         self.plan = plan
         self.scheme = plan.scheme
         if decode_coll is None:
@@ -93,11 +94,13 @@ class DisaggSimulator:
             raise ValueError(
                 f"kv_model mode {self.kv.mode!r} != scheme transfer mode "
                 f"{plan.scheme.transfer_mode!r}")
-        self.pre_sim = PlanSimulator(plan.prefill_plan, store, coll)
+        self.pre_sim = PlanSimulator(plan.prefill_plan, store, coll,
+                                     cost_store=cost_store)
         self.dec_sim = PlanSimulator(plan.decode_plan, decode_store,
-                                     decode_coll)
+                                     decode_coll, cost_store=cost_store)
         # last simulate()'s combined pool cache counters (cost reuse)
-        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0}
+        self.cache_stats = {"hits": 0, "misses": 0, "entries": 0,
+                            "evictions": 0}
 
     # -- helpers --------------------------------------------------------------
 
@@ -255,10 +258,8 @@ class DisaggSimulator:
             # stream behind), costed through the same transfer model
             return est_of(r).wire_s
 
-        dec_cache = StepCostCache(self.dec_sim.iteration_cost,
-                                  owner=self.dec_sim)
-        pre_cache = StepCostCache(self.pre_sim.iteration_cost,
-                                  owner=self.pre_sim)
+        dec_cache = self.dec_sim.cost_cache()
+        pre_cache = self.pre_sim.cost_cache()
 
         def add_decode_pool(buckets):
             return engine.add_pool(
@@ -309,7 +310,7 @@ class DisaggSimulator:
         dec_results = dec_pool.results()
         self.cache_stats = {
             k: pre_cache.stats()[k] + dec_cache.stats()[k]
-            for k in ("hits", "misses", "entries")}
+            for k in ("hits", "misses", "entries", "evictions")}
         results = pre_results + dec_results
         if not results:
             return SimulationReport.infeasible(plan.label())
