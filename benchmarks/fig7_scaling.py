@@ -36,7 +36,8 @@ cache = T.init_cache(cfg, 4, 128)
 sh = lambda t, specs: jax.device_put(t, jax.tree.map(
     lambda s: NamedSharding(mesh, s), specs,
     is_leaf=lambda s: isinstance(s, P)))
-with jax.sharding.set_mesh(mesh):
+from repro.launch.mesh import mesh_context
+with mesh_context(mesh):
     ps = sh(params, param_pspecs(params, cfg, mesh))
     cs = sh(cache, cache_pspecs(cache, cfg, mesh))
     toks = jnp.ones((4, 1), jnp.int32)

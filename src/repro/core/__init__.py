@@ -6,7 +6,10 @@ from .engine import (ContinuousScheduler, Engine, PreemptionPolicy,
                      SacrificePolicy, SchedulerPolicy, SharedCostStore,
                      SharedLink, StaticScheduler, StepCostCache,
                      SwapPolicy, make_preemption)
-from .metrics import ClassReport, p50, p95, p99, percentile
+from .faults import (FaultSchedule, LinkDegradation, ReplicaFault,
+                     Straggler, fault_ensemble, normalize_faults)
+from .metrics import ClassReport, ResilienceReport, p50, p95, p99, \
+    percentile
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
                       cpu_local, cross_pool_link, get_cluster,
                       h100_multinode, h100_node, h200_node, host_link,
@@ -22,7 +25,8 @@ from .profiles import AnalyticBackend, CollectiveModel, MeasuredBackend, \
 from .fluid import FluidDisaggSimulator, FluidSimulator, TraceSummary
 from .multifid import MultiFidelityResult, MultiFidelitySearch, RungStat
 from .quant import FORMATS, QuantFormat, get_format, register_format
-from .search import ApexSearch, SearchResult, compare_three_plans, fork_map
+from .search import (ApexSearch, PlanEvaluationError, SearchResult,
+                     compare_three_plans, fork_map)
 from .simulator import PlanSimulator, SimulationReport, cost_fingerprint
 from .templates import CellScheme, CollectiveCall, reshard_collectives, \
     schemes_for_cell
@@ -39,10 +43,13 @@ __all__ = [
     "ContinuousScheduler", "CrossAttentionCell", "DEFAULT_SLO",
     "DeviceSpec", "Engine",
     "ExecutionPlan", "FORMATS", "FluidDisaggSimulator", "FluidSimulator",
+    "FaultSchedule", "LinkDegradation",
     "MLACell", "MLPCell", "MeasuredBackend", "ModelIR", "MoECell",
     "MultiFidelityResult", "MultiFidelitySearch", "RungStat",
-    "NetworkLevel", "OpCall", "PreemptionPolicy", "SLOClass",
-    "TraceSummary", "cost_fingerprint", "cpu_local", "fork_map",
+    "NetworkLevel", "OpCall", "PlanEvaluationError", "PreemptionPolicy",
+    "ReplicaFault", "ResilienceReport", "SLOClass", "Straggler",
+    "TraceSummary", "cost_fingerprint", "cpu_local", "fault_ensemble",
+    "fork_map", "normalize_faults",
     "ParallelScheme", "PlanSimulator", "ProfileBackend", "ProfileStore",
     "QuantFormat", "Request", "SSMCell", "SacrificePolicy",
     "SchedulerPolicy", "SearchResult",

@@ -60,6 +60,10 @@ from .trace import Request
 # Event priority classes at equal timestamps: deliveries must land in a
 # replica's pending queue before an iteration boundary at the same time
 # inspects it (legacy semantics: admission admits ``arrival <= now``).
+# Fault transitions (fail-stop / repair, core/faults.py) fire before
+# both, so a delivery at the instant of a failure already sees the
+# replica down and reroutes to a survivor.
+_PRIO_FAULT = 0
 _PRIO_DELIVER = 1
 _PRIO_ITER_END = 2
 
@@ -224,22 +228,33 @@ class SharedLink:
 
     ``congestion=False`` reproduces the independent-per-request transfer
     model exactly (so does any link fast enough never to queue).
+
+    ``degradation`` (optional, ``time -> factor >= 1``) models a
+    fault-injected bandwidth drop: the wire/delay components of a
+    transfer starting while the factor exceeds 1 stretch by it.  The
+    default (None) is arithmetically identical to factor 1.0.
     """
 
-    def __init__(self, congestion: bool = True):
+    def __init__(self, congestion: bool = True,
+                 degradation: Optional[Callable[[float], float]] = None):
         self.congestion = congestion
+        self.degradation = degradation
         self.free_at = 0.0
         self.queued_s = 0.0          # total queuing delay added by contention
+        self.degraded_s = 0.0        # extra wire time added by degradation
 
     def transfer(self, finish_time: float, est) -> float:
         """Completion time of a transfer whose prefill ended at
         ``finish_time``, with per-request costs ``est``
         (a ``TransferEstimate``)."""
-        independent = finish_time + est.delay_s
+        f = self.degradation(finish_time) if self.degradation else 1.0
+        independent = finish_time + est.delay_s * f
         if not self.congestion:
+            self.degraded_s += est.delay_s * (f - 1.0)
             return independent
-        start = max(finish_time - est.stream_lead_s, self.free_at)
-        done = start + est.wire_s
+        self.degraded_s += est.wire_s * (f - 1.0)
+        start = max(finish_time - est.stream_lead_s * f, self.free_at)
+        done = start + est.wire_s * f
         self.free_at = done
         self.queued_s += max(0.0, done - independent)
         return done
@@ -568,6 +583,12 @@ class ContinuousScheduler(SchedulerPolicy):
                 mid = [k + steps // 2 for k in kv_lens]
                 w_mid = A.workload_decode(mid, len(A.active))
                 d_mid, e_mid = A.cost(w_mid)
+                scale = A.step_scale()
+                if scale != 1.0:
+                    # the whole run stays inside one straggler regime:
+                    # _ff_steps is bounded by the next fault transition
+                    d_mid *= scale
+                    e_mid *= scale
                 for a in A.active:
                     a.generated += steps
                 # per-token times: uniform at d_mid
@@ -716,6 +737,8 @@ class Replica:
         self.busy = False
         self._busy_until: Optional[float] = None  # scheduled iteration end
         self._wake_at: Optional[float] = None   # pending idle-wake event
+        self.failed = False           # fail-stopped (core/faults.py)
+        self.fail_epoch = 0           # invalidates in-flight iteration ends
         self.order = 0
         self.iters = 0
         self.energy = 0.0
@@ -737,7 +760,7 @@ class Replica:
 
     @property
     def max_sequences(self) -> int:
-        return self.pool.max_sequences
+        return self.pool.live_max_sequences()
 
     @property
     def role(self) -> str:
@@ -759,11 +782,19 @@ class Replica:
             return t, e
         return self.pool.step_cost(w)
 
+    def step_scale(self) -> float:
+        """Straggler slowdown factor at ``now`` — applied AFTER the cost
+        lookup so degraded iterations never pollute the (fault-free)
+        step-cost cache, and so fault-free runs stay bit-identical."""
+        if not self.pool.stragglers:
+            return 1.0
+        return self.pool.slowdown(self, self.now)
+
     # -- event handlers ----------------------------------------------------
 
     def advance(self) -> None:
         """Run admissions and start the next iteration (or go idle)."""
-        if self.busy:
+        if self.busy or self.failed:
             return
         policy = self.pool.policy
         while True:
@@ -771,6 +802,10 @@ class Replica:
             if self.active:
                 prefills, decodes, w = policy.build(self)
                 dur, en = self.cost(w)
+                scale = self.step_scale()
+                if scale != 1.0:
+                    dur *= scale
+                    en *= scale
                 self.energy += en
                 self.iters += 1
                 self.peak_batch = max(self.peak_batch,
@@ -779,8 +814,9 @@ class Replica:
                 self._busy_until = self.now + dur
                 self.pool.engine.schedule(
                     self.now + dur, _PRIO_ITER_END, self.order,
-                    lambda t, p=prefills, d=decodes, dd=dur:
-                    self.on_iter_end(t, p, d, dd))
+                    lambda t, p=prefills, d=decodes, dd=dur,
+                    ep=self.fail_epoch:
+                    self.on_iter_end(t, p, d, dd, ep))
                 return
             if self.pending:
                 t = self.pending[0].arrival
@@ -804,21 +840,74 @@ class Replica:
     def on_wake(self, t: float) -> None:
         if self._wake_at is not None and self._wake_at <= t:
             self._wake_at = None
-        if self.busy:
+        if self.busy or self.failed:
             return                      # a delivery already woke us
         self.now = max(self.now, t)
         self.advance()
 
     def on_iter_end(self, now: float, prefills, decodes,
-                    dur: float) -> None:
+                    dur: float, epoch: Optional[int] = None) -> None:
+        if epoch is not None and epoch != self.fail_epoch:
+            return      # the iteration was aborted by a fail-stop
         self.busy = False
         self._busy_until = None
         self.now = now
         self.pool.policy.apply(self, prefills, decodes, dur)
         self.advance()
 
+    # -- fault transitions (core/faults.py) --------------------------------
+
+    def fail(self, now: float) -> None:
+        """Fail-stop: the in-flight iteration and all KV (device AND
+        host-parked) are lost.  Active and pending requests re-queue to
+        surviving replicas through the pool's sacrifice/recompute path
+        (graceful degradation); with no survivor they wait here for
+        repair."""
+        if self.failed:
+            return
+        self.failed = True
+        self.fail_epoch += 1            # invalidates the in-flight step
+        self.now = max(self.now, now)
+        self.busy = False
+        self._busy_until = None
+        self._wake_at = None
+        victims = self.active
+        self.active = []
+        self.swapped.clear()            # host-parked KV dies with the node
+        pending = self.pending
+        self.pending = []
+        self.pool.on_replica_fail(self, victims, pending, now)
+
+    def repair(self, now: float) -> None:
+        """Return to service with an empty cache; any requests stranded
+        here (no survivor existed at failure time) resume.  The clock
+        only jumps to the repair time when there IS stranded work —
+        an idle repaired replica must not inflate the run's makespan
+        (later deliveries advance it through the heap as usual)."""
+        if not self.failed:
+            return
+        self.failed = False
+        self.pool.down -= 1
+        if self.pending or self.active:
+            self.now = max(self.now, now)
+        self.advance()
+
     def deliver(self, req: Request, now: float) -> None:
         """A routed/transferred/re-fetched request becomes visible."""
+        if self.failed:
+            alt = self.pool.least_loaded_alive()
+            if alt is not None:
+                # reroute to a survivor, moving this request's record
+                # (and shadow membership) so its history follows it
+                rec = self.records.pop(req.rid, None)
+                if rec is not None and req.rid not in alt.records:
+                    alt.records[req.rid] = rec
+                if req.rid in self.shadow:
+                    self.shadow.discard(req.rid)
+                    alt.shadow.add(req.rid)
+                alt.deliver(req, now)
+                return
+            # no survivor: queue here and wait for repair
         if req.rid not in self.records:
             self.records[req.rid] = RequestRecord(
                 req.rid, req.arrival, req.context_len, req.gen_len,
@@ -877,6 +966,11 @@ class Replica:
         bounds = []
         if self.pending:
             bounds.append(self.pending[0].arrival)
+        fault_t = self.pool.engine.fault_bound(self.now)
+        if fault_t is not None:
+            # never fast-forward across a fault transition: a failure or
+            # straggler-window edge changes this replica's world
+            bounds.append(fault_t)
         pool_bound = self.pool.incoming_bound()
         if pool_bound is not None:
             bounds.append(pool_bound)
@@ -997,7 +1091,82 @@ class Pool:
         # coupled topologies: the pool whose iteration-end events spawn
         # this pool's deliveries (bounds downstream fast-forward runs)
         self.upstream: Optional["Pool"] = None
+        # fault-injection state (core/faults.py; inert by default)
+        self.down = 0                        # currently failed replicas
+        self.stragglers: List = []           # applied Straggler windows
+        self.fault_throttle = 1.0            # admission scale while down
         self.replicas = [Replica(self, i, b) for i, b in enumerate(buckets)]
+
+    # -- fault handling (core/faults.py) -----------------------------------
+
+    def live_max_sequences(self) -> int:
+        """Admission concurrency cap, throttled while the pool is
+        degraded (graceful degradation: survivors admit less so queued
+        work does not thrash their KV into preemption storms)."""
+        if self.down and self.fault_throttle < 1.0:
+            return max(1, int(self.max_sequences * self.fault_throttle))
+        return self.max_sequences
+
+    def slowdown(self, replica: "Replica", t: float) -> float:
+        """Product of straggler factors active on ``replica`` at ``t``."""
+        f = 1.0
+        for s in self.stragglers:
+            if s.replica == replica.index and s.start <= t < s.end:
+                f *= s.slowdown
+        return f
+
+    def least_loaded_alive(self, exclude: Optional["Replica"] = None
+                           ) -> Optional["Replica"]:
+        alive = [r for r in self.replicas
+                 if not r.failed and r is not exclude]
+        if not alive:
+            return None
+        return min(alive, key=lambda r: (len(r.active) + len(r.pending),
+                                         r.index))
+
+    def on_replica_fail(self, rep: "Replica", victims, pending,
+                        now: float) -> None:
+        """Redistribute a failed replica's work to survivors.
+
+        ``victims`` (its active set) lost their KV — each counts as a
+        preemption and re-enters via the sacrifice/recompute path: in the
+        disagg decode role that means a re-fetch through the prefill pool
+        (engine-coupled re-prefill or delay model), elsewhere a plain
+        re-queue.  ``pending`` re-queues as-is.  With no survivor,
+        everything waits on ``rep`` for repair.
+        """
+        self.down += 1
+        self.engine.fault_requeues += len(victims)
+        for v in victims:
+            rep.records[v.req.rid].preemptions += 1
+            rep.preemptions += 1
+            v.reset()
+        if self.role == "decode" and victims:
+            # shipped prompt KV is gone: victims re-materialize it like
+            # sacrificed preemptees.  Engine-coupled refetch parks them
+            # upstream (they return via deliver(), which reroutes off a
+            # dead replica); delay-mode refetch re-inserts into
+            # rep.pending, collected below for redistribution.
+            for v in victims:
+                rep.refetch(v.req, now)
+            pending = pending + rep.pending
+            rep.pending = []
+        else:
+            pending = [v.req for v in victims] + pending
+        if not pending:
+            return
+        if all(r.failed for r in self.replicas):
+            rep.pending = sorted(pending, key=lambda r: r.arrival)
+            return                       # total outage: wait for repair
+        for req in pending:
+            target = self.least_loaded_alive()
+            rec = rep.records.pop(req.rid, None)
+            if rec is not None and req.rid not in target.records:
+                target.records[req.rid] = rec
+            if req.rid in rep.shadow:
+                rep.shadow.discard(req.rid)
+                target.shadow.add(req.rid)
+            target.deliver(req, now)
 
     # -- in-flight delivery bookkeeping (fast-forward bounds) --------------
 
@@ -1050,12 +1219,63 @@ class Engine:
         self.heap: List[tuple] = []
         self.pools: Dict[str, Pool] = {}
         self._seq = 0
+        # fault-injection state (inert unless install_faults ran)
+        self.faults = None                  # the installed FaultSchedule
+        self.fault_times: List[float] = []  # sorted transition times
+        self.fault_requeues = 0             # requests re-queued by failures
 
     def add_pool(self, name: str, buckets, capacity: int,
                  policy: BatchingPolicy, cost, **kw) -> Pool:
         pool = Pool(self, name, buckets, capacity, policy, cost, **kw)
         self.pools[name] = pool
         return pool
+
+    # -- fault injection (core/faults.py) ----------------------------------
+
+    def fault_bound(self, now: float) -> Optional[float]:
+        """Earliest fault transition strictly after ``now`` (bounds
+        fast-forward runs); None when no faults are installed."""
+        if not self.fault_times:
+            return None
+        i = bisect.bisect_right(self.fault_times, now)
+        return self.fault_times[i] if i < len(self.fault_times) else None
+
+    def install_faults(self, schedule) -> None:
+        """Resolve a ``FaultSchedule`` against the registered pools and
+        push its transitions onto the event heap.  Must run after every
+        ``add_pool`` and before ``run()``.  Events aimed at replicas a
+        pool does not have are inert; an empty schedule installs
+        nothing (bit-identical to a fault-free run)."""
+        if schedule is None or schedule.empty:
+            return
+        times = set()
+        for f in schedule.replica_faults:
+            for pool in self.pools.values():
+                if f.pool not in ("*", pool.name):
+                    continue
+                if f.replica >= len(pool.replicas):
+                    continue
+                rep = pool.replicas[f.replica]
+                times.add(f.start)
+                self.schedule(f.start, _PRIO_FAULT, f.replica,
+                              lambda t, r=rep: r.fail(t))
+                if f.repair != float("inf"):
+                    times.add(f.repair)
+                    self.schedule(f.repair, _PRIO_FAULT, f.replica,
+                                  lambda t, r=rep: r.repair(t))
+        for s in schedule.stragglers:
+            for pool in self.pools.values():
+                if s.pool not in ("*", pool.name):
+                    continue
+                if s.replica >= len(pool.replicas):
+                    continue
+                pool.stragglers.append(s)
+                times.add(s.start)
+                times.add(s.end)
+        for pool in self.pools.values():
+            pool.fault_throttle = schedule.throttle
+        self.fault_times = sorted(times)
+        self.faults = schedule
 
     def schedule(self, time: float, prio: int, tie: int,
                  fn: Callable[[float], None]) -> None:

@@ -122,6 +122,47 @@ def request_metrics(records: Sequence, total_time: float) -> dict:
 
 
 @dataclasses.dataclass
+class ResilienceReport:
+    """Outcome of one faulted run (or an ensemble aggregate) — what a
+    plan's service looked like while the cluster was degraded.
+
+    ``goodput_rps`` is the WHOLE faulted run's SLO goodput (the
+    ``degraded_goodput`` search objective ranks on it: resilience is
+    how much good service survives the fault draw, not only inside the
+    outage windows); the window-split fields compare service during vs
+    outside merged fault windows.  For an ensemble aggregate
+    (``ensemble_size > 1``) counts are summed across members and
+    rates/percentiles are member means.
+    """
+
+    availability: float           # 1 - down replica-seconds / total
+    requests_total: int
+    requests_finished: int
+    requests_dropped: int         # never finished (e.g. stuck on a dead
+                                  # replica with no survivor to take them)
+    requests_requeued: int        # fault-induced KV losses re-queued
+    degraded_seconds: float       # merged fault-window time
+    goodput_rps: float            # SLO-met / s over the whole faulted run
+    degraded_window_goodput_rps: float
+    nominal_window_goodput_rps: float
+    ttft_p95_degraded: float      # requests finishing inside fault windows
+    ttft_p95_nominal: float
+    tpot_p95_degraded: float
+    tpot_p95_nominal: float
+    ensemble_size: int = 1
+
+    def summary(self) -> str:
+        return (f"avail={self.availability:.3f} "
+                f"goodput={self.goodput_rps:.2f}req/s "
+                f"(degraded-window "
+                f"{self.degraded_window_goodput_rps:.2f}, nominal "
+                f"{self.nominal_window_goodput_rps:.2f}) "
+                f"requeued={self.requests_requeued} "
+                f"dropped={self.requests_dropped} "
+                f"[x{self.ensemble_size}]")
+
+
+@dataclasses.dataclass
 class SimulationReport:
     """Per-plan simulation outcome (the paper's 'comprehensive evaluation')."""
 
@@ -156,6 +197,9 @@ class SimulationReport:
     # multi-tenant SLO outcome
     goodput_rps: float = 0.0      # requests meeting their class SLO / s
     class_reports: Optional[List[ClassReport]] = None
+    # fault-injection outcome: set only when the run (or an ensemble of
+    # re-simulations) carried a non-empty FaultSchedule
+    resilience: Optional[ResilienceReport] = None
 
     @classmethod
     def infeasible(cls, plan_label: str) -> "SimulationReport":
@@ -199,4 +243,6 @@ class SimulationReport:
                   f"{self.tpot_p95 * 1e3:.2f}/{self.tpot_p99 * 1e3:.2f} ms")]
         for cr in self.class_reports or ():
             lines.append("  " + cr.summary())
+        if self.resilience is not None:
+            lines.append("  resilience: " + self.resilience.summary())
         return "\n".join(lines)

@@ -128,13 +128,18 @@ class MultiFidelitySearch:
         Prefix-vs-full ranking drift is instead absorbed by the generous
         ``promote_frac`` and the ``frontier_k`` floor."""
         self.inner = search
+        if frontier_k <= 0:
+            raise ValueError(f"frontier_k must be > 0, got {frontier_k}")
         self.frontier_k = frontier_k
         self.slo_slack = slo_slack
         self.tie_rel = tie_rel
-        self.rungs = sorted(rungs)
+        self.rungs = list(rungs)
         if any(not 0.0 < f < 1.0 for f in self.rungs):
             raise ValueError(f"rung fractions must lie in (0, 1), "
                              f"got {list(rungs)}")
+        if any(b <= a for a, b in zip(self.rungs, self.rungs[1:])):
+            raise ValueError(f"rung fractions must be strictly "
+                             f"increasing, got {list(rungs)}")
         if not 0.0 < promote_frac <= 1.0:
             raise ValueError(f"promote_frac must lie in (0, 1], "
                              f"got {promote_frac}")
@@ -235,7 +240,8 @@ class MultiFidelitySearch:
                jobs: int = 1,
                preemption=None,
                slo_classes=None,
-               halving: bool = True) -> MultiFidelityResult:
+               halving: bool = True,
+               faults=None) -> MultiFidelityResult:
         """Same signature semantics as ``ApexSearch.search``; returns a
         ``MultiFidelityResult`` whose ``result`` ranks only the confirmed
         finalists (``result.all_reports`` holds one EXACT full-trace
@@ -251,7 +257,27 @@ class MultiFidelitySearch:
         tie-aware frontier under the requested objective, so the full
         trace is paid only by the finalists.  ``halving=False`` restores
         the PR 4 behavior (every screening survivor runs the full
-        trace)."""
+        trace).
+
+        ``faults`` applies ONLY to the final full-trace confirmation:
+        screening (fluid surrogate) and the halving rungs stay
+        fault-free by design — the surrogate has no fault dynamics and
+        prefix rungs would rank on truncated fault windows — so the
+        ladder orders candidates by nominal service and the finalists
+        pay for the seeded faulted re-simulations that
+        ``objective="degraded_goodput"`` ranks on."""
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r}; choose "
+                             f"one of {sorted(OBJECTIVES)}")
+        if jobs < 0:
+            raise ValueError(f"jobs must be >= 0, got {jobs}")
+        from .faults import attach_resilience, normalize_faults
+        faults = normalize_faults(faults)
+        if objective == "degraded_goodput" and not faults:
+            raise ValueError(
+                "objective='degraded_goodput' needs a non-empty fault "
+                "ensemble: pass faults=FaultSchedule(...) or "
+                "faults=fault_ensemble(...)")
         obj = OBJECTIVES[objective]
         inner = self.inner
         requests = retag_slo(requests, slo_classes)
@@ -297,9 +323,11 @@ class MultiFidelitySearch:
                   f"({screen_s:.2f}s, "
                   f"{n_cand / screen_s if screen_s > 0 else 0:.0f} plans/s)")
 
-        def make_eval(idx: List[int], reqs: Sequence[Request]):
+        def make_eval(idx: List[int], reqs: Sequence[Request],
+                      fault_set=()):
             """Exact evaluation of candidates ``idx`` on trace ``reqs`` —
-            one closure shape for every rung and the final confirm."""
+            one closure shape for every rung and the final confirm
+            (``fault_set`` is non-empty only at the final confirm)."""
             def eval_one(j: int):
                 cand = candidates[idx[j]]
                 _, sim = inner.make_simulator(cand, kv_model)
@@ -309,7 +337,18 @@ class MultiFidelitySearch:
                 rep = sim.simulate(reqs, policy=policy,
                                    preemption=preemption, **sim_kwargs)
                 st = getattr(sim, "cache_stats", None) or {}
-                return rep, st.get("hits", 0), st.get("misses", 0)
+                hits, misses = st.get("hits", 0), st.get("misses", 0)
+                if fault_set and rep.feasible:
+                    members = []
+                    for f in fault_set:
+                        members.append(sim.simulate(
+                            reqs, policy=policy, preemption=preemption,
+                            faults=f, **sim_kwargs))
+                        st = getattr(sim, "cache_stats", None) or {}
+                        hits += st.get("hits", 0)
+                        misses += st.get("misses", 0)
+                    rep = attach_resilience(rep, members)
+                return rep, hits, misses
             return eval_one
 
         # ---- phase 2a: successive-halving rungs on trace prefixes ----
@@ -368,7 +407,8 @@ class MultiFidelitySearch:
                 print(f"[confirm] {done}/{total} exact, best={lbl}")
 
         reports, best_j, fh, fm = inner._evaluate_ranked(
-            make_eval(survivors, requests), len(survivors), obj,
+            make_eval(survivors, requests, fault_set=faults),
+            len(survivors), obj,
             slo_ttft_s, slo_tpot_s,
             jobs=jobs, progress=confirm_progress, tag="confirm")
         hits += fh

@@ -53,6 +53,15 @@ OBJECTIVES = {
     # maximize requests meeting their own SLO class's targets per second
     # (classless traces degrade to request throughput)
     "goodput": lambda r: -r.goodput_rps,
+    # resilience-aware: maximize SLO goodput under a seeded fault
+    # ensemble (``search(..., faults=...)``).  Reports without a
+    # resilience block (fluid surrogate screening, halving rungs — both
+    # fault-free by design) rank by their fault-free goodput, so the
+    # multi-fidelity ladder still orders candidates sensibly and only
+    # exact confirmation pays for faulted re-simulation.
+    "degraded_goodput": lambda r: -(r.resilience.goodput_rps
+                                    if r.resilience is not None
+                                    else r.goodput_rps),
 }
 
 # A candidate plan before simulation: family is "colocated" | "disagg",
@@ -65,6 +74,48 @@ Candidate = Tuple[str, object, Optional[tuple]]
 # forked parallel evaluation
 # ---------------------------------------------------------------------------
 
+class PlanEvaluationError(RuntimeError):
+    """A per-candidate evaluation crashed — carries WHICH candidate.
+
+    Raised by ``fork_map`` for both serial and forked failures, so a
+    crash on candidate 137 of 1000 names the failing plan instead of
+    surfacing as an anonymous worker traceback (forked workers cannot
+    even propagate arbitrary exceptions — they may not pickle)."""
+
+    def __init__(self, index: int, label: Optional[str],
+                 cause_repr: str, worker_traceback: str = ""):
+        self.index = index
+        self.label = label
+        self.cause_repr = cause_repr
+        self.worker_traceback = worker_traceback
+        what = f"evaluation of candidate {index}"
+        if label:
+            what += f" ({label})"
+        super().__init__(f"{what} failed: {cause_repr}")
+
+
+class _WorkerFailure:
+    """Picklable stand-in a forked worker sends back when ``fn(i)``
+    raises (the exception object itself may hold unpicklable state —
+    simulator closures, heap lambdas)."""
+
+    __slots__ = ("index", "cause_repr", "traceback")
+
+    def __init__(self, index: int, cause_repr: str, traceback: str):
+        self.index = index
+        self.cause_repr = cause_repr
+        self.traceback = traceback
+
+
+def _label_of(label, i: int) -> Optional[str]:
+    if label is None:
+        return None
+    try:
+        return label(i)
+    except Exception:
+        return None
+
+
 # The work closure is stashed module-level and inherited by forked
 # workers (copy-on-write), so nothing but an index crosses the pipe on
 # the way in and a picklable report on the way out.
@@ -72,21 +123,31 @@ _FORK_WORK: dict = {"fn": None}
 
 
 def _fork_call(i: int):
-    return _FORK_WORK["fn"](i)
+    try:
+        return _FORK_WORK["fn"](i)
+    except Exception as exc:          # -> picklable failure sentinel
+        import traceback
+        return _WorkerFailure(i, repr(exc), traceback.format_exc())
 
 
 def _serial_map(fn: Callable[[int], object], n: int,
-                progress: Optional[Callable[[int], None]] = None) -> list:
+                progress: Optional[Callable[[int], None]] = None,
+                label: Optional[Callable[[int], str]] = None) -> list:
     out = []
     for i in range(n):
-        out.append(fn(i))
+        try:
+            out.append(fn(i))
+        except Exception as exc:
+            raise PlanEvaluationError(i, _label_of(label, i),
+                                      repr(exc)) from exc
         if progress:
             progress(i + 1)
     return out
 
 
 def fork_map(fn: Callable[[int], object], n: int, jobs: int,
-             progress: Optional[Callable[[int], None]] = None) -> list:
+             progress: Optional[Callable[[int], None]] = None,
+             label: Optional[Callable[[int], str]] = None) -> list:
     """``[fn(i) for i in range(n)]`` across ``jobs`` forked processes.
 
     Falls back to the serial loop when ``jobs <= 1``, there is nothing
@@ -95,9 +156,13 @@ def fork_map(fn: Callable[[int], object], n: int, jobs: int,
     platforms (Windows, some macOS configurations) get the serial
     fallback with a warning rather than a crash.  Results come back
     in index order, so callers see exactly the serial sequence.
+
+    A crash inside ``fn(i)`` — serial or forked — raises
+    ``PlanEvaluationError`` naming the failing index (and its
+    ``label(i)``, when given), never a bare worker traceback.
     """
     if jobs <= 1 or n <= 1:
-        return _serial_map(fn, n, progress)
+        return _serial_map(fn, n, progress, label)
     import multiprocessing as mp
     if "fork" not in mp.get_all_start_methods():
         import warnings
@@ -105,16 +170,20 @@ def fork_map(fn: Callable[[int], object], n: int, jobs: int,
             "search(jobs=N) needs the 'fork' start method, which this "
             "platform does not offer; evaluating serially instead",
             RuntimeWarning, stacklevel=2)
-        return _serial_map(fn, n, progress)
+        return _serial_map(fn, n, progress, label)
     try:
         ctx = mp.get_context("fork")
     except ValueError:
-        return _serial_map(fn, n, progress)
+        return _serial_map(fn, n, progress, label)
     _FORK_WORK["fn"] = fn
     try:
         with ctx.Pool(min(jobs, n)) as pool:
             out = []
             for i, res in enumerate(pool.imap(_fork_call, range(n))):
+                if isinstance(res, _WorkerFailure):
+                    raise PlanEvaluationError(
+                        res.index, _label_of(label, res.index),
+                        res.cause_repr, res.traceback)
                 out.append(res)
                 if progress:
                     progress(i + 1)
@@ -211,13 +280,23 @@ class ApexSearch:
                  policy: Optional[BatchingPolicy] = None,
                  keep_records: bool = False,
                  preemption=None,
-                 slo_classes=None) -> SimulationReport:
+                 slo_classes=None,
+                 faults=None) -> SimulationReport:
+        from .faults import attach_resilience, normalize_faults
+        faults = normalize_faults(faults)
         plan = map_scheme(scheme, self.cluster)
         sim = PlanSimulator(plan, self.store, self.coll,
                             cost_store=self.cost_store)
-        return sim.simulate(requests, policy=policy,
-                            keep_records=keep_records,
-                            preemption=preemption, slo_classes=slo_classes)
+        rep = sim.simulate(requests, policy=policy,
+                           keep_records=keep_records,
+                           preemption=preemption, slo_classes=slo_classes)
+        if faults and rep.feasible:
+            members = [sim.simulate(requests, policy=policy,
+                                    preemption=preemption,
+                                    slo_classes=slo_classes, faults=f)
+                       for f in faults]
+            rep = attach_resilience(rep, members)
+        return rep
 
     def evaluate_baseline(self, requests: Sequence[Request],
                           quant: str = "fp16",
@@ -349,7 +428,8 @@ class ApexSearch:
                verbose: bool = False,
                jobs: int = 1,
                preemption=None,
-               slo_classes=None) -> SearchResult:
+               slo_classes=None,
+               faults=None) -> SearchResult:
         """Rank plans under ``objective``; with ``disaggregated=True`` the
         candidate set is the union of colocated schemes and two-pool
         disaggregated schemes (disagg/), scored by the same simulator
@@ -391,8 +471,26 @@ class ApexSearch:
         recent-first); ``slo_classes`` re-tags the trace's SLO classes
         by name before simulation, so ``objective="goodput"`` ranks by
         requests meeting their class targets per second.
+
+        ``faults`` (a ``FaultSchedule`` or a ``fault_ensemble`` list)
+        re-simulates every feasible candidate under each member schedule
+        and attaches the ensemble-aggregated ``ResilienceReport`` to its
+        nominal report — required by ``objective="degraded_goodput"``,
+        which ranks plans by how much SLO goodput survives the draws.
         """
         t0 = _time.perf_counter()
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r}; choose "
+                             f"one of {sorted(OBJECTIVES)}")
+        if jobs < 0:
+            raise ValueError(f"jobs must be >= 0, got {jobs}")
+        from .faults import attach_resilience, normalize_faults
+        faults = normalize_faults(faults)
+        if objective == "degraded_goodput" and not faults:
+            raise ValueError(
+                "objective='degraded_goodput' needs a non-empty fault "
+                "ensemble: pass faults=FaultSchedule(...) or "
+                "faults=fault_ensemble(...)")
         obj = OBJECTIVES[objective]
         requests = retag_slo(requests, slo_classes)
         candidates, kv_model = self.candidates(
@@ -411,12 +509,24 @@ class ApexSearch:
             rep = sim.simulate(requests, policy=policy,
                                preemption=preemption, **sim_kwargs)
             st = getattr(sim, "cache_stats", None) or {}
-            return rep, st.get("hits", 0), st.get("misses", 0)
+            hits, misses = st.get("hits", 0), st.get("misses", 0)
+            if faults and rep.feasible:
+                members = []
+                for f in faults:
+                    members.append(sim.simulate(
+                        requests, policy=policy, preemption=preemption,
+                        faults=f, **sim_kwargs))
+                    st = getattr(sim, "cache_stats", None) or {}
+                    hits += st.get("hits", 0)
+                    misses += st.get("misses", 0)
+                rep = attach_resilience(rep, members)
+            return rep, hits, misses
 
         reports, best_idx, hits, misses = self._evaluate_ranked(
             eval_one, len(candidates), obj, slo_ttft_s, slo_tpot_s,
             jobs=jobs, progress=progress, verbose=verbose,
-            tag="search")
+            tag="search",
+            label=lambda i: candidates[i][1].label())
         if best_idx is None:
             raise RuntimeError(
                 "no feasible plan found (memory or SLO constraints too "
@@ -438,7 +548,8 @@ class ApexSearch:
                          jobs: int = 1,
                          progress: Optional[Callable] = None,
                          verbose: bool = False,
-                         tag: str = "search"):
+                         tag: str = "search",
+                         label: Optional[Callable[[int], str]] = None):
         """Run ``eval_one`` over ``range(n)`` (serial or forked), track
         the SLO-filtered objective winner, and aggregate cache counters.
         Returns (reports, best_idx, cache_hits, cache_misses)."""
@@ -474,7 +585,7 @@ class ApexSearch:
             res = eval_one(i)
             return res
 
-        ordered = fork_map(run, n, jobs)
+        ordered = fork_map(run, n, jobs, label=label)
         for i, res in enumerate(ordered):
             results.append(res)
             on_result(i, res[0])

@@ -83,7 +83,7 @@ def _cluster_key(cluster) -> tuple:
 
 
 def cost_fingerprint(plan: ExecutionPlan, store: ProfileStore,
-                     coll: CollectiveModel) -> tuple:
+                     coll: CollectiveModel, fault_key: tuple = ()) -> tuple:
     """Everything ``PlanSimulator.iteration_cost`` reads, as a hashable key.
 
     Two plans with equal fingerprints price every workload identically, so
@@ -95,13 +95,20 @@ def cost_fingerprint(plan: ExecutionPlan, store: ProfileStore,
     EXCLUDES ``model_dp``: replicas of the same layout run identical
     iterations, and sharing across DP widths is the big cross-plan win.
     All components are frozen dataclasses, so equality is structural.
+
+    ``fault_key`` (``FaultSchedule.cost_key()``) segregates runs under a
+    degraded cluster state: straggler-scaled or link-degraded dynamics
+    must never reuse (or seed) a healthy state's table.
     """
     scheme = plan.scheme
-    return (scheme.model, scheme.pp_stages, scheme.cell_schemes,
+    base = (scheme.model, scheme.pp_stages, scheme.cell_schemes,
             scheme.quant, plan.stage_span,
             tuple(g.span for g in plan.cell_groups),
             _cluster_key(plan.cluster),
             getattr(store.backend, "freq_ghz", None), store.grid_stride)
+    if fault_key:
+        base = base + (("faults",) + tuple(fault_key),)
+    return base
 
 
 class PlanSimulator:
@@ -136,13 +143,18 @@ class PlanSimulator:
                                                  self.coll)
         return self._fingerprint
 
-    def cost_cache(self) -> StepCostCache:
+    def cost_cache(self, fault_key: tuple = ()) -> StepCostCache:
         """A fresh ``StepCostCache`` for one run: a view onto the shared
         store's fingerprint table when one was provided, private
-        otherwise (direct ``PlanSimulator`` use stays golden-identical)."""
+        otherwise (direct ``PlanSimulator`` use stays golden-identical).
+        A non-empty ``fault_key`` selects the degraded-state bucket —
+        healthy-state entries are never visible to a faulted run."""
         if self.cost_store is not None:
-            return self.cost_store.cache(self.fingerprint(),
-                                         self.iteration_cost, owner=self)
+            fp = self.fingerprint()
+            if fault_key:
+                fp = fp + (("faults",) + tuple(fault_key),)
+            return self.cost_store.cache(fp, self.iteration_cost,
+                                         owner=self)
         return StepCostCache(self.iteration_cost, owner=self)
 
     # -- per-iteration cost (the engine's step_cost callback) -----------------
@@ -260,15 +272,23 @@ class PlanSimulator:
                  keep_records: bool = False,
                  preemption=None,
                  swap_cost: Optional[SwapCost] = None,
-                 slo_classes=None) -> SimulationReport:
+                 slo_classes=None,
+                 faults=None) -> SimulationReport:
         """``preemption`` selects the KV-overflow policy (menu string or
         ``PreemptionPolicy``; None = sacrifice + recent-first, the
         golden-pinned default); ``swap_cost`` overrides the PCIe host-link
         pricing the swap mechanism defaults to.  ``slo_classes`` re-tags
-        the trace's SLO classes by name (``trace.retag_slo``)."""
+        the trace's SLO classes by name (``trace.retag_slo``).
+
+        ``faults`` (a ``core.faults.FaultSchedule``) injects fail-stops/
+        stragglers into the run; the report then carries a
+        ``resilience`` block, and unfinished requests (stranded on a dead
+        replica) are dropped from the latency stats.  An empty schedule
+        is bit-identical to ``faults=None``."""
         policy = policy or BatchingPolicy()
         scheme = self.scheme
         requests = retag_slo(requests, slo_classes)
+        faulted = faults is not None and not faults.empty
         self._flops_accum = 0.0
         self._bytes_accum = 0.0
         cap = scheme.kv_token_capacity(self.plan.cluster.device.hbm_bytes)
@@ -281,7 +301,8 @@ class PlanSimulator:
             buckets[i % scheme.model_dp].append(r)
 
         engine = Engine()
-        cache = self.cost_cache()
+        cache = self.cost_cache(
+            fault_key=faults.cost_key() if faulted else ())
         pool = engine.add_pool(
             "serve", buckets, cap, policy, cache,
             windows=self.windows,
@@ -289,6 +310,8 @@ class PlanSimulator:
             preemption=preemption,
             swap_cost=swap_cost or default_swap_cost(
                 scheme, power=self.coll.power))
+        if faulted:
+            engine.install_faults(faults)
         engine.run()
         results = pool.results()
         self.cache_stats = cache.stats()
@@ -299,7 +322,13 @@ class PlanSimulator:
         self._bytes_accum = 0.0
         pool.replay_accumulators(self)
 
-        records = [rec for res in results for rec in res.records]
+        all_records = [rec for res in results for rec in res.records]
+        if faulted:
+            # a request stranded on a dead replica never finished —
+            # excluded from latency/goodput stats, counted as dropped
+            records = [r for r in all_records if r.finish_time > 0.0]
+        else:
+            records = all_records
         total_time = max(res.total_time for res in results)
         total_energy = sum(res.total_energy for res in results)
         gen_tokens = sum(r.gen_len for r in records)
@@ -311,6 +340,13 @@ class PlanSimulator:
                / (total_time * n_dev * peak)) if total_time > 0 else 0.0
         mbu = (self._bytes_accum
                / (total_time * n_dev * bw)) if total_time > 0 else 0.0
+
+        resilience = None
+        if faulted:
+            from .faults import build_resilience
+            resilience = build_resilience(
+                faults, all_records, total_time,
+                {"serve": scheme.model_dp}, engine.fault_requeues)
 
         return SimulationReport(
             plan_label=scheme.label(),
@@ -328,4 +364,5 @@ class PlanSimulator:
             swap_ins=sum(r.swap_ins for r in results),
             kv_swap_s=sum(r.kv_swap_s for r in results),
             kv_refetch_s=sum(r.kv_refetch_s for r in results),
+            resilience=resilience,
             **request_metrics(records, total_time))

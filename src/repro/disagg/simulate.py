@@ -136,16 +136,33 @@ class DisaggSimulator:
                  link: Optional[SharedLink] = None,
                  preemption=None,
                  swap_cost: Optional[SwapCost] = None,
-                 slo_classes=None) -> SimulationReport:
+                 slo_classes=None,
+                 faults=None) -> SimulationReport:
         """``preemption`` drives BOTH pools' KV-overflow handling (menu
         string or ``PreemptionPolicy``; None = sacrifice + recent-first).
         Under ``swap`` a decode-pool victim's KV parks on the host —
         never leaving the node — so the re-prefill/re-transfer coupling
         (``on_preempt``) fires only for sacrifice.  ``swap_cost``
         overrides the per-pool PCIe host-link pricing; ``slo_classes``
-        re-tags the trace's SLO classes by name."""
+        re-tags the trace's SLO classes by name.
+
+        ``faults`` (a ``core.faults.FaultSchedule``) injects pool-aware
+        fail-stops ("prefill"/"decode"/"*" targets), stragglers, and
+        cross-pool ``LinkDegradation`` windows (the shared wire's
+        transfer times stretch inside them); the report then carries a
+        ``resilience`` block.  A decode-pool failure's victims re-fetch
+        their prompt KV through the prefill pool, exactly like
+        sacrificed preemptees."""
         plan = self.plan
         requests = retag_slo(requests, slo_classes)
+        faulted = faults is not None and not faults.empty
+        if faulted and not reprefill_occupancy:
+            # the staged baseline drains the two pools back-to-back on
+            # detached schedules — a mid-run failure has no coupled
+            # dynamics to degrade there
+            raise ValueError("fault injection requires "
+                             "reprefill_occupancy=True (the coupled "
+                             "two-pool mode)")
         pre_pol = (prefill_policy or plan.prefill_policy or policy
                    or BatchingPolicy())
         dec_pol = (decode_policy or plan.decode_policy or policy
@@ -190,7 +207,11 @@ class DisaggSimulator:
 
         engine = Engine()
         if link is None:
-            link = SharedLink(congestion=congestion)
+            link = SharedLink(congestion=congestion,
+                              degradation=faults.link_factor
+                              if faulted and faults.link_faults else None)
+        elif faulted and faults.link_faults and link.degradation is None:
+            link.degradation = faults.link_factor
         dec_bal = BacklogBalancer(dec_s.model_dp, drain_rate=dec_rate)
         parked: Dict[int, tuple] = {}   # refetch rid -> (replica, req, t0)
         state = {"refetch_seq": 0}
@@ -258,8 +279,9 @@ class DisaggSimulator:
             # stream behind), costed through the same transfer model
             return est_of(r).wire_s
 
-        dec_cache = self.dec_sim.cost_cache()
-        pre_cache = self.pre_sim.cost_cache()
+        fault_key = faults.cost_key() if faulted else ()
+        dec_cache = self.dec_sim.cost_cache(fault_key=fault_key)
+        pre_cache = self.pre_sim.cost_cache(fault_key=fault_key)
 
         def add_decode_pool(buckets):
             return engine.add_pool(
@@ -286,6 +308,8 @@ class DisaggSimulator:
             # re-prefills flow between the pools as live events
             dec_pool = add_decode_pool([[] for _ in range(dec_s.model_dp)])
             dec_pool.upstream = pre_pool   # bounds decode fast-forward
+            if faulted:
+                engine.install_faults(faults)
             engine.run()
         else:
             # staged: drain the prefill pool, resolve transfers through
@@ -366,6 +390,10 @@ class DisaggSimulator:
                 rec.swap_s = pre_rec.swap_s
             merged.append(rec)
 
+        all_merged = merged
+        if faulted:
+            # stranded on a dead replica with no survivor: never finished
+            merged = [r for r in merged if r.finish_time > 0.0]
         total_time = max(res.total_time for res in results)
         total_energy = (sum(res.total_energy for res in results)
                         + transfer_energy)
@@ -385,6 +413,14 @@ class DisaggSimulator:
         mfu = flops / (total_time * peak) if total_time > 0 else 0.0
         mbu = nbytes / (total_time * bw) if total_time > 0 else 0.0
 
+        resilience = None
+        if faulted:
+            from ..core.faults import build_resilience
+            resilience = build_resilience(
+                faults, all_merged, total_time,
+                {"prefill": pre_s.model_dp, "decode": dec_s.model_dp},
+                engine.fault_requeues)
+
         return SimulationReport(
             plan_label=plan.label(),
             e2e_latency=total_time,
@@ -401,4 +437,5 @@ class DisaggSimulator:
             swap_ins=sum(r.swap_ins for r in results),
             kv_swap_s=sum(r.kv_swap_s for r in results),
             kv_refetch_s=sum(r.kv_refetch_s for r in results),
+            resilience=resilience,
             **request_metrics(merged, total_time))

@@ -148,9 +148,10 @@ def lower_cell(arch: str, shape_name: str, mesh, *,
     daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dax = daxes if len(daxes) > 1 else daxes[0]
 
-    # set_mesh enables PartitionSpec-based shard_hints inside model code
-    import contextlib
-    mesh_ctx = jax.sharding.set_mesh(mesh)
+    # an active mesh enables PartitionSpec-based shard_hints inside model
+    # code (set_mesh on new jax, the legacy global-mesh context on old)
+    from .mesh import mesh_context
+    mesh_ctx = mesh_context(mesh)
 
     with mesh_ctx:
         t0 = time.perf_counter()

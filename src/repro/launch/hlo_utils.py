@@ -126,8 +126,14 @@ class HloModule:
                 cur["dot_flops"] += self._dot_flops(cur, type_str, rest,
                                                     line)
 
-    @staticmethod
-    def _dot_flops(comp: dict, result_type: str, rest: str,
+    # first operand of an instruction's argument list: an optional inline
+    # type annotation (newer HLO: ``dot(f32[64,32]{1,0} %Arg_0.1, ...)``)
+    # followed by the operand name
+    _LHS_RE = re.compile(r"\s*(?:(\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+)?"
+                         r"%?([\w.\-]+)")
+
+    @classmethod
+    def _dot_flops(cls, comp: dict, result_type: str, rest: str,
                    line: str) -> float:
         _, rshapes = _shape_info(result_type)
         if not rshapes:
@@ -136,13 +142,14 @@ class HloModule:
         rsize = 1
         for d in rdims:
             rsize *= d
-        # contracting dims from the lhs operand's shape
+        # contracting dims from the lhs operand's shape (inline type when
+        # the HLO dialect prints one, else the defining instruction's)
         lhs_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-        ops_m = re.match(r"\s*%?([\w.\-]+)", rest)
+        ops_m = cls._LHS_RE.match(rest)
         contract = 1
         if lhs_m and ops_m:
-            lhs_name = ops_m.group(1)
-            lhs_type = comp["symbols"].get(lhs_name)
+            inline_type, lhs_name = ops_m.groups()
+            lhs_type = inline_type or comp["symbols"].get(lhs_name)
             if lhs_type:
                 _, lshapes = _shape_info(lhs_type)
                 if lshapes:

@@ -27,6 +27,20 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def mesh_context(mesh):
+    """Context manager activating ``mesh`` for PartitionSpec-based
+    sharding constraints, across jax versions: ``jax.sharding.set_mesh``
+    (newest), ``use_mesh`` (transitional), or the legacy global-mesh
+    context (``with mesh:``) on jax <= 0.4.x."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh          # jax.sharding.Mesh is itself a context manager
+
+
 def data_axes(mesh) -> tuple:
     """The batch-sharding axes of a mesh: ("pod", "data") when a pod axis
     exists, else ("data",)."""

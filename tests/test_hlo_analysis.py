@@ -59,7 +59,10 @@ def test_raw_cost_analysis_undercounts():
         return y
 
     comp = jax.jit(f).lower(x, w).compile()
-    raw = comp.cost_analysis()["flops"]
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0]
+    raw = cost["flops"]
     corrected = analyze(comp.as_text())["dot_flops"]
     assert corrected >= 9 * raw * 0.9      # raw counts the body once
 

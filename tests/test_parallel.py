@@ -151,7 +151,8 @@ ps = jax.device_put(params, sh(pspecs))
 ospecs = type(opt)(master=pspecs, m=pspecs, v=pspecs, step=P())
 os_ = jax.device_put(opt, sh(ospecs))
 bs = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
-with jax.sharding.set_mesh(mesh):
+from repro.launch.mesh import mesh_context
+with mesh_context(mesh):
     p2, o2, m2 = jax.jit(step, in_shardings=(sh(pspecs), sh(ospecs),
                          NamedSharding(mesh, P("data", None))))(ps, os_, bs)
 assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-2, \
