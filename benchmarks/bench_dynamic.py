@@ -1,0 +1,238 @@
+"""Dynamic re-planning benchmark: does plan switching beat the best
+static plan on a non-stationary day?
+
+The trace is a compressed "day": a quiet night, a steep business-hours
+ramp, an evening shoulder, and a quiet tail (``PiecewiseRate`` — the
+phase boundaries below scale a diurnal shape down to a benchmarkable
+horizon without changing the question).  The benchmark runs one exact
+static sweep and one ``dynamic=DynamicSpec(...)`` sweep (epoch-gated
+schedules over the top static finalists, drain mechanism), then reports
+the head-to-head: best-static vs best-dynamic SLO goodput, with every
+reconfiguration itemized (re-shard seconds/bytes, drain overrun, stall,
+energy).  When the static plan wins, that is the honest negative
+result — the reconfiguration bill is the point of the subsystem.
+
+Also demonstrates the fluid guard: the multi-fidelity surrogate REFUSES
+this trace by default (one-rate screening would mis-rank) and is timed
+in its ``nonstationary="peak"`` fallback.
+
+Writes ``BENCH_dynamic.json`` next to the repo root:
+
+    PYTHONPATH=src python benchmarks/bench_dynamic.py [--smoke] [--jobs N]
+                                                      [--out PATH]
+
+``--smoke`` shrinks the model/trace for CI and additionally ASSERTS the
+subsystem's load-bearing properties: an empty ``DynamicSpec`` is
+bit-identical to ``dynamic=None``, dynamic candidates carry itemized
+nonzero reconfiguration bills, the dynamic run replays bit-identically
+from a fresh context, and no request is lost across plan switches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import time
+
+from repro.core import (ApexSearch, DynamicPlanSimulator, DynamicSpec,
+                        EpochSchedule, MultiFidelitySearch, PiecewiseRate,
+                        get_trace, h100_node, ir_from_hf_config)
+
+SMOKE_CFG = dict(hidden_size=256, num_hidden_layers=4,
+                 num_attention_heads=8, num_key_value_heads=4,
+                 intermediate_size=1024, vocab_size=1024)
+FULL_CFG = dict(hidden_size=2048, num_hidden_layers=16,
+                num_attention_heads=16, num_key_value_heads=8,
+                intermediate_size=8192, vocab_size=32000)
+
+
+def build(smoke: bool):
+    """(search, requests, spec, slos): a day-shaped piecewise trace and
+    the dynamic spec that searches epoch schedules over it.  The epoch
+    grid tracks the phase length, and the explicit schedules are the
+    oracle timetables a capacity planner would write down: switch to the
+    runner-up finalist for the busy phase, switch back after."""
+    if smoke:
+        model = ir_from_hf_config(SMOKE_CFG, name="tiny")
+        n_req = 60
+        day = PiecewiseRate(starts=(0.0, 2.0), rates=(2.0, 80.0))
+        epoch_s = 2.0
+        slos = dict(slo_ttft_s=0.5, slo_tpot_s=0.2)
+        oracle = (EpochSchedule(epochs=((0.0, 0), (2.0, 1))),
+                  EpochSchedule(epochs=((0.0, 1), (2.0, 0))))
+    else:
+        model = ir_from_hf_config(FULL_CFG, name="tiny-7b")
+        n_req = 500
+        # night 1.5/s -> business hours 6/s -> evening tail 2/s
+        day = PiecewiseRate(starts=(0.0, 60.0, 120.0),
+                            rates=(1.5, 6.0, 2.0))
+        epoch_s = 30.0
+        slos = dict(slo_ttft_s=1.0, slo_tpot_s=0.25)
+        oracle = (EpochSchedule(epochs=((0.0, 0), (60.0, 1), (120.0, 0))),
+                  EpochSchedule(epochs=((0.0, 1), (60.0, 0), (120.0, 1))))
+    cluster = h100_node(8)
+    reqs = get_trace("summarization", arrival_rate=day, seed=3,
+                     num_requests=n_req)
+    spec = DynamicSpec(epoch_s=epoch_s, top_k=3, mechanism="drain",
+                       schedules=oracle)
+    return ApexSearch(model, cluster), reqs, spec, slos
+
+
+def report_row(rep):
+    row = {
+        "plan": rep.plan_label,
+        "goodput_rps": round(rep.goodput_rps, 3),
+        "ttft_p95_ms": round(rep.ttft_p95 * 1e3, 2),
+        "tpot_p95_ms": round(rep.tpot_p95 * 1e3, 2),
+        "energy_kj": round(rep.total_energy / 1e3, 3),
+    }
+    if rep.reconfig is not None:
+        rc = rep.reconfig
+        row["reconfig"] = {
+            "mechanism": rc.mechanism,
+            "switches": [{
+                "at_s": round(s.at_s, 2),
+                "reshard_s": round(s.reshard_s, 6),
+                "reshard_gb": round(s.reshard_bytes / 1e9, 4),
+                "migrate_s": round(s.migrate_s, 6),
+                "migrated": s.migrated,
+                "drain_s": round(s.drain_s, 4),
+                "drained": s.drained,
+                "stall_s": round(s.stall_s, 4),
+                "energy_j": round(s.energy_j, 3),
+            } for s in rc.switches],
+            "total_stall_s": round(rc.total_stall_s, 4),
+            "total_energy_j": round(rc.total_energy_j, 3),
+        }
+    if rep.windows:
+        row["windows"] = [{
+            "start_s": round(w.start, 1), "end_s": round(w.end, 1),
+            "arrivals": w.arrivals, "finished": w.finished,
+            "goodput_rps": round(w.goodput_rps, 3),
+            "ttft_p95_ms": round(w.ttft_p95 * 1e3, 2),
+        } for w in rep.windows]
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizing for CI, plus correctness asserts")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="forked workers for the static sweep")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+
+    search, reqs, spec, slos = build(args.smoke)
+
+    t0 = time.perf_counter()
+    static = search.search(reqs, objective="goodput", max_model_dp=4,
+                           jobs=args.jobs, **slos)
+    static_s = round(time.perf_counter() - t0, 3)
+
+    t0 = time.perf_counter()
+    dyn = search.search(reqs, objective="goodput", max_model_dp=4,
+                        jobs=args.jobs, dynamic=spec, **slos)
+    dyn_s = round(time.perf_counter() - t0, 3)
+
+    dyn_reports = [r for r in dyn.all_reports if r.reconfig is not None]
+    best_dynamic = (max(dyn_reports, key=lambda r: r.goodput_rps)
+                    if dyn_reports else None)
+    switching_wins = dyn.best.reconfig is not None
+
+    # fluid guard: the surrogate refuses this trace by default
+    mf = MultiFidelitySearch(search, frontier_k=4)
+    try:
+        mf.search(reqs, objective="goodput", max_model_dp=4, **slos)
+        guard_refused = False
+    except ValueError:
+        guard_refused = True
+    t0 = time.perf_counter()
+    mres = mf.search(reqs, objective="goodput", max_model_dp=4,
+                     jobs=args.jobs, nonstationary="peak", **slos)
+    mf_s = round(time.perf_counter() - t0, 3)
+
+    out = {
+        "bench": "bench_dynamic",
+        "smoke": args.smoke,
+        "jobs": args.jobs,
+        "n_requests": len(reqs),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "num_static_candidates": static.num_schemes,
+        "num_dynamic_candidates": len(dyn_reports),
+        "best_static": report_row(static.best),
+        "best_dynamic": (report_row(best_dynamic)
+                         if best_dynamic is not None else None),
+        "switching_wins": switching_wins,
+        "goodput_delta_rps": (
+            round(best_dynamic.goodput_rps - static.best.goodput_rps, 3)
+            if best_dynamic is not None else None),
+        "exact_seconds": {"static": static_s, "dynamic": dyn_s},
+        "fluid_guard": {
+            "refused_by_default": guard_refused,
+            "peak_mode_seconds": mf_s,
+            "peak_mode_best": mres.best.plan_label,
+        },
+    }
+
+    if args.smoke:
+        # empty spec == no spec, bit-identical
+        empty = search.search(reqs, objective="goodput", max_model_dp=4,
+                              jobs=args.jobs, dynamic=DynamicSpec(),
+                              **slos)
+        assert [dataclasses.asdict(r) for r in empty.all_reports] == \
+            [dataclasses.asdict(r) for r in static.all_reports], \
+            "empty DynamicSpec must be bit-identical to dynamic=None"
+        # every dynamic candidate bills its switches
+        assert dyn_reports, "dynamic sweep produced no candidates"
+        for r in dyn_reports:
+            assert r.reconfig.num_switches >= 1
+            for s in r.reconfig.switches:
+                assert s.reshard_s > 0 and s.reshard_bytes > 0
+        # seeded determinism + request conservation through a switch,
+        # from a rebuilt context (fresh cost caches, fresh RNG path)
+        s2, reqs2, spec2, _ = build(args.smoke)
+        cands2, kv2 = s2.candidates(quant="fp16")
+        sched = spec2.schedules[0]
+        runs = []
+        for sch in (search, s2):
+            c, k = sch.candidates(quant="fp16")
+            d = DynamicPlanSimulator(sch, c, sched, kv_model=k,
+                                     mechanism="drain")
+            runs.append(d.simulate(reqs, keep_records=True))
+        a, b = runs
+        assert len(a.records) == len(reqs), "requests lost at the switch"
+        assert [dataclasses.asdict(r) for r in a.records] == \
+            [dataclasses.asdict(r) for r in b.records], \
+            "dynamic run must replay bit-identically"
+        assert guard_refused, "fluid guard must refuse by default"
+        print("smoke asserts passed: empty-spec identity, itemized "
+              "bills, replay determinism, request conservation, "
+              "fluid-guard refusal")
+
+    path = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_dynamic.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"best static:  {out['best_static']['plan']}  "
+          f"goodput={out['best_static']['goodput_rps']} req/s")
+    if best_dynamic is not None:
+        print(f"best dynamic: {best_dynamic.plan_label}")
+        print(f"  goodput={out['best_dynamic']['goodput_rps']} req/s, "
+              f"{best_dynamic.reconfig.summary()}")
+    print(f"switching wins: {switching_wins} "
+          f"(delta {out['goodput_delta_rps']} req/s)")
+    print(f"fluid guard refused by default: {guard_refused}; "
+          f"peak-mode multifid in {mf_s}s -> "
+          f"{out['fluid_guard']['peak_mode_best']}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

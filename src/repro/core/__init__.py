@@ -2,14 +2,17 @@
 planning for LLM serving via dynamism-aware simulation."""
 
 from .batching import BatchingModule, BatchingPolicy, BatchingResult
+from .dynamic import (DynamicPlanSimulator, DynamicSpec, EpochSchedule,
+                      ReconfigReport, SwitchCost, build_schedules,
+                      fault_schedule, reactive_schedule)
 from .engine import (ContinuousScheduler, Engine, PreemptionPolicy,
                      SacrificePolicy, SchedulerPolicy, SharedCostStore,
                      SharedLink, StaticScheduler, StepCostCache,
                      SwapPolicy, make_preemption)
 from .faults import (FaultSchedule, LinkDegradation, ReplicaFault,
                      Straggler, fault_ensemble, normalize_faults)
-from .metrics import ClassReport, ResilienceReport, p50, p95, p99, \
-    percentile
+from .metrics import (ClassReport, ResilienceReport, WindowReport, p50,
+                      p95, p99, percentile, windowed_metrics)
 from .cluster import (CLUSTER_PRESETS, Cluster, DeviceSpec, NetworkLevel,
                       cpu_local, cross_pool_link, get_cluster,
                       h100_multinode, h100_node, h200_node, host_link,
@@ -30,13 +33,21 @@ from .search import (ApexSearch, PlanEvaluationError, SearchResult,
 from .simulator import PlanSimulator, SimulationReport, cost_fingerprint
 from .templates import CellScheme, CollectiveCall, reshard_collectives, \
     schemes_for_cell
-from .trace import (DEFAULT_SLO, ClassTraffic, Request, SLOClass,
-                    TRACE_SPECS, get_trace, mixed_trace, prefix_trace,
-                    retag_slo, synthesize_mixed_trace, synthesize_trace,
+from .trace import (DEFAULT_SLO, ArrivalProcess, BurstProcess,
+                    ClassTraffic, ConstantRate, DiurnalRate,
+                    PiecewiseRate, Request, SLOClass,
+                    TRACE_SPECS, as_arrival_process, get_trace,
+                    mixed_trace, prefix_trace, retag_slo,
+                    synthesize_mixed_trace, synthesize_trace,
                     trace_stats)
 
 __all__ = [
-    "ApexSearch", "AnalyticBackend", "AttentionCell", "BatchingModule",
+    "ApexSearch", "AnalyticBackend", "ArrivalProcess", "AttentionCell",
+    "BatchingModule", "BurstProcess", "ConstantRate", "DiurnalRate",
+    "DynamicPlanSimulator", "DynamicSpec", "EpochSchedule",
+    "PiecewiseRate", "ReconfigReport", "SwitchCost", "WindowReport",
+    "as_arrival_process", "build_schedules", "fault_schedule",
+    "reactive_schedule", "windowed_metrics",
     "BatchingPolicy", "BatchingResult", "Block", "Cell", "CellScheme",
     "CLUSTER_PRESETS", "ClassReport", "ClassTraffic", "Cluster",
     "CollectiveCall", "CollectiveModel",

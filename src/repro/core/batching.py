@@ -53,6 +53,13 @@ class BatchingPolicy:
     max_prefill_tokens: int = 16384        # per-iteration prefill budget
     fast_forward: bool = True
     fast_forward_cap: int = 64
+    # memory-threshold admission control (continuous mode only): when a
+    # busy replica's projected KV occupancy (reserved + the head request's
+    # demand) would exceed ``admission_watermark * capacity``, the head is
+    # deferred (held in queue; the default) or rejected outright
+    # (dropped + counted).  None disables the gate (legacy behaviour).
+    admission_watermark: Optional[float] = None
+    admission_mode: str = "defer"        # "defer" | "reject"
 
 
 @dataclasses.dataclass
@@ -68,6 +75,7 @@ class RequestRecord:
     swaps: int = 0                # evictions served by KV swap (not recompute)
     swap_s: float = 0.0           # host-link round-trip delay charged on swaps
     slo_class: SLOClass = DEFAULT_SLO
+    rejected: bool = False        # dropped by admission control (never served)
 
     @property
     def ttft(self) -> float:
@@ -97,6 +105,8 @@ class BatchingResult:
     swap_outs: int = 0            # victims whose KV moved to host
     swap_ins: int = 0             # swapped victims re-admitted from host
     kv_swap_s: float = 0.0        # total host-link delay across all swaps
+    admission_rejected: int = 0   # requests dropped at the watermark
+    admission_deferred: int = 0   # unique requests held at the watermark
 
 
 StepCost = Callable[[Workload], Tuple[float, float]]

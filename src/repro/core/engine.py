@@ -64,8 +64,9 @@ from .trace import Request
 # both, so a delivery at the instant of a failure already sees the
 # replica down and reroutes to a survivor.
 _PRIO_FAULT = 0
-_PRIO_DELIVER = 1
-_PRIO_ITER_END = 2
+_PRIO_EPOCH = 1
+_PRIO_DELIVER = 2
+_PRIO_ITER_END = 3
 
 
 # ---------------------------------------------------------------------------
@@ -473,6 +474,28 @@ class ContinuousScheduler(SchedulerPolicy):
             saved = A.swapped.get(A.pending[0].rid) if A.swapped else None
             demand = (saved[0] + saved[1]) if saved is not None \
                 else A.pending[0].context_len
+            # memory-threshold admission control: when projected KV
+            # occupancy would cross the watermark, defer (hold in queue)
+            # or reject (drop, counted) the head instead of admitting
+            # into near-certain preemption.  A busy watermark never
+            # starves: the liveness rule below still admits onto an
+            # idle replica, so every deferred request eventually runs.
+            wm = cfg.admission_watermark
+            if wm is not None and A.active:
+                projected = A.kv_reserved() + demand
+                if projected > wm * A.capacity:
+                    req = A.pending[0]
+                    if cfg.admission_mode == "reject":
+                        A.pending.pop(0)
+                        rec = A.records[req.rid]
+                        rec.rejected = True
+                        rec.finish_time = 0.0
+                        A.admission_rejected += 1
+                        continue
+                    if req.rid not in A.deferred_rids:
+                        A.deferred_rids.add(req.rid)
+                        A.admission_deferred += 1
+                    break
             headroom = len(A.active) + 1
             cap_ok = (A.kv_reserved() + demand
                       + headroom <= A.capacity)
@@ -699,6 +722,16 @@ class StaticScheduler(SchedulerPolicy):
 
 
 def make_policy(cfg: BatchingPolicy) -> SchedulerPolicy:
+    if cfg.admission_watermark is not None:
+        if not 0.0 < cfg.admission_watermark <= 1.0:
+            raise ValueError(f"admission_watermark must be in (0, 1], "
+                             f"got {cfg.admission_watermark}")
+        if cfg.admission_mode not in ("defer", "reject"):
+            raise ValueError(f"unknown admission_mode "
+                             f"{cfg.admission_mode!r} (defer|reject)")
+        if cfg.mode == "static":
+            raise ValueError("admission_watermark requires continuous "
+                             "batching (static admission is batch-gated)")
     if cfg.mode == "static":
         return StaticScheduler(cfg)
     if cfg.mode == "continuous":
@@ -749,6 +782,9 @@ class Replica:
         self.peak_kv = 0
         self.peak_batch = 0
         self.kv_refetch_s = 0.0
+        self.admission_rejected = 0
+        self.admission_deferred = 0
+        self.deferred_rids: set = set()   # dedup for the deferred counter
         self.cost_calls: List[tuple] = []    # (flops_inc, bytes_inc)
         self._refetch_cache: Dict[int, float] = {}
 
@@ -966,11 +1002,12 @@ class Replica:
         bounds = []
         if self.pending:
             bounds.append(self.pending[0].arrival)
-        fault_t = self.pool.engine.fault_bound(self.now)
-        if fault_t is not None:
-            # never fast-forward across a fault transition: a failure or
-            # straggler-window edge changes this replica's world
-            bounds.append(fault_t)
+        boundary_t = self.pool.engine.next_boundary(self.now)
+        if boundary_t is not None:
+            # never fast-forward across a world-change boundary: a fault
+            # transition, straggler-window edge, or epoch re-planning
+            # boundary changes this replica's world
+            bounds.append(boundary_t)
         pool_bound = self.pool.incoming_bound()
         if pool_bound is not None:
             bounds.append(pool_bound)
@@ -1033,7 +1070,9 @@ class Replica:
                               kv_refetch_s=self.kv_refetch_s,
                               swap_outs=self.swap_outs,
                               swap_ins=self.swap_ins,
-                              kv_swap_s=self.kv_swap_s)
+                              kv_swap_s=self.kv_swap_s,
+                              admission_rejected=self.admission_rejected,
+                              admission_deferred=self.admission_deferred)
 
 
 # ---------------------------------------------------------------------------
@@ -1223,6 +1262,10 @@ class Engine:
         self.faults = None                  # the installed FaultSchedule
         self.fault_times: List[float] = []  # sorted transition times
         self.fault_requeues = 0             # requests re-queued by failures
+        # epoch-gated re-planning state (inert unless install_epoch ran)
+        self.epoch_times: List[float] = []  # sorted epoch boundaries
+        self.stopped = False                # epoch handler halts run()
+        self._boundary_times: List[float] = []  # faults | epochs, merged
 
     def add_pool(self, name: str, buckets, capacity: int,
                  policy: BatchingPolicy, cost, **kw) -> Pool:
@@ -1230,15 +1273,49 @@ class Engine:
         self.pools[name] = pool
         return pool
 
-    # -- fault injection (core/faults.py) ----------------------------------
+    # -- world-change boundaries (faults + epoch re-planning) --------------
+
+    def _rebuild_boundaries(self) -> None:
+        self._boundary_times = sorted(set(self.fault_times)
+                                      | set(self.epoch_times))
+
+    def next_boundary(self, now: float) -> Optional[float]:
+        """Earliest world-change boundary strictly after ``now`` — a
+        fault transition or an epoch re-planning boundary.  Both bound
+        fast-forward runs identically: past either, this replica's world
+        may change, so uneventful-decode runs must not cross it.  One
+        shared helper means faults + re-planning compose without
+        double-bounding bugs.  None when neither is installed."""
+        times = self._boundary_times
+        if not times:
+            return None
+        i = bisect.bisect_right(times, now)
+        return times[i] if i < len(times) else None
 
     def fault_bound(self, now: float) -> Optional[float]:
-        """Earliest fault transition strictly after ``now`` (bounds
-        fast-forward runs); None when no faults are installed."""
-        if not self.fault_times:
-            return None
-        i = bisect.bisect_right(self.fault_times, now)
-        return self.fault_times[i] if i < len(self.fault_times) else None
+        """Earliest fault transition strictly after ``now``; kept as a
+        delegating alias of ``next_boundary`` (which also folds in epoch
+        boundaries) for callers of the PR-9 API."""
+        return self.next_boundary(now)
+
+    def install_epoch(self, time: float,
+                      handler: Callable[[float], None]) -> None:
+        """Push one epoch boundary onto the heap.  The handler fires at
+        ``_PRIO_EPOCH`` — after fault transitions at the same instant,
+        before deliveries and iteration ends — and typically freezes the
+        engine via ``stop()`` so a plan controller can re-shard and
+        resume on a new engine.  Must run after ``add_pool`` and before
+        ``run()``."""
+        self.epoch_times.append(time)
+        self.epoch_times.sort()
+        self._rebuild_boundaries()
+        self.schedule(time, _PRIO_EPOCH, 0, handler)
+
+    def stop(self) -> None:
+        """Halt ``run()`` after the current event (epoch switching)."""
+        self.stopped = True
+
+    # -- fault injection (core/faults.py) ----------------------------------
 
     def install_faults(self, schedule) -> None:
         """Resolve a ``FaultSchedule`` against the registered pools and
@@ -1276,6 +1353,7 @@ class Engine:
             pool.fault_throttle = schedule.throttle
         self.fault_times = sorted(times)
         self.faults = schedule
+        self._rebuild_boundaries()
 
     def schedule(self, time: float, prio: int, tie: int,
                  fn: Callable[[float], None]) -> None:
@@ -1305,6 +1383,6 @@ class Engine:
             for rep in pool.replicas:
                 rep.advance()
         heap = self.heap
-        while heap:
+        while heap and not self.stopped:
             time, _prio, _tie, _seq, fn = heapq.heappop(heap)
             fn(time)

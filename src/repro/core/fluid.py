@@ -42,6 +42,7 @@ the exact engine confirms the winners.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence, Tuple
 
 from .batching import BatchingPolicy
@@ -88,6 +89,15 @@ class TraceSummary:
     # per-SLO-class populations (highest priority first); empty means
     # treat the whole trace as one DEFAULT_SLO class
     classes: tuple = ()
+    # stationarity diagnostics over 4 equal arrival windows: the max
+    # per-window deviation from the uniform share in Poisson standard
+    # errors (z ~ <2 for a stationary trace; diurnal/burst traces score
+    # far higher), and the busiest window's arrival rate.  The fluid
+    # model assumes ONE arrival rate, so a high score means the
+    # surrogate is screening a workload it cannot represent —
+    # ``MultiFidelitySearch`` refuses or falls back to ``peak_rate``.
+    nonstationarity: float = 0.0
+    peak_rate: float = 0.0
 
     @classmethod
     def of(cls, requests: Sequence[Request]) -> "TraceSummary":
@@ -112,6 +122,16 @@ class TraceSummary:
                     [float(r.context_len) for r in rs], 0.95)),
                 gen_p95=float(percentile(
                     [float(r.gen_len) for r in rs], 0.95))))
+        z = 0.0
+        peak = n / span if span > 0 else float("inf")
+        if span > 0 and n >= 8:
+            win = span / 4.0
+            counts = [0] * 4
+            for r in requests:
+                counts[min(int(r.arrival / win), 3)] += 1
+            m = n / 4.0
+            z = max(abs(c - m) for c in counts) / math.sqrt(m)
+            peak = max(counts) / win
         return cls(
             n=n, span_s=span,
             arrival_rate=n / span if span > 0 else float("inf"),
@@ -119,7 +139,8 @@ class TraceSummary:
             ctx_p95=float(percentile([float(c) for c in ctxs], 0.95)),
             gen_p95=float(percentile([float(g) for g in gens], 0.95)),
             source_mean=sum(r.source_len for r in requests) / n,
-            classes=tuple(classes))
+            classes=tuple(classes),
+            nonstationarity=z, peak_rate=peak)
 
     @classmethod
     def of_prefixes(cls, requests: Sequence[Request],

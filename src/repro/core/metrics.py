@@ -122,6 +122,92 @@ def request_metrics(records: Sequence, total_time: float) -> dict:
 
 
 @dataclasses.dataclass
+class WindowReport:
+    """One time window's slice of a simulation — the unit of the
+    TTFT/TPOT/goodput *timeline* a non-stationary run is judged by.
+
+    Arrivals are bucketed by arrival time; latency percentiles and
+    goodput cover the requests that FINISHED inside the window (the
+    service the operator observed during it).  Unfinished and
+    admission-rejected requests appear in ``arrivals``/``rejected``
+    only."""
+
+    start: float
+    end: float
+    arrivals: int                 # requests arriving in [start, end)
+    finished: int                 # requests finishing in [start, end)
+    rejected: int                 # admission-control drops arriving here
+    slo_met: int
+    goodput_rps: float            # slo_met / window seconds
+    ttft_mean: float
+    ttft_p95: float
+    tpot_p95: float
+    arrival_rate: float           # arrivals / window seconds
+
+    def summary(self) -> str:
+        return (f"[{self.start:8.1f}-{self.end:8.1f}s] "
+                f"in={self.arrivals} ({self.arrival_rate:.2f}/s) "
+                f"out={self.finished} "
+                f"TTFT p95={self.ttft_p95 * 1e3:.0f}ms "
+                f"TPOT p95={self.tpot_p95 * 1e3:.1f}ms "
+                f"goodput={self.goodput_rps:.2f}req/s"
+                + (f" rejected={self.rejected}" if self.rejected else ""))
+
+
+def windowed_metrics(records: Sequence, window_s: Optional[float] = None,
+                     boundaries: Optional[Sequence[float]] = None,
+                     horizon: Optional[float] = None) -> List[WindowReport]:
+    """Slice a run's records into a per-window metric timeline.
+
+    Pass EITHER ``window_s`` (uniform windows from 0) or explicit
+    ``boundaries`` (window start times, first must be 0 — e.g. the epoch
+    boundaries of a dynamic plan schedule).  ``horizon`` extends the
+    last window's end (default: the latest arrival/finish observed).
+    """
+    if (window_s is None) == (boundaries is None):
+        raise ValueError("pass exactly one of window_s / boundaries")
+    last = max([max(r.arrival, r.finish_time) for r in records],
+               default=0.0)
+    horizon = max(horizon if horizon is not None else 0.0, last)
+    if window_s is not None:
+        if window_s <= 0:
+            raise ValueError(f"window_s must be positive, got {window_s}")
+        n = max(1, int(math.ceil(horizon / window_s - 1e-12)))
+        edges = [i * window_s for i in range(n + 1)]
+    else:
+        edges = list(boundaries)
+        if not edges or edges[0] != 0.0:
+            raise ValueError(f"boundaries must start at 0, got {edges!r}")
+        if any(b >= a for a, b in zip(edges[1:], edges)):
+            raise ValueError(f"boundaries must be strictly increasing, "
+                             f"got {edges!r}")
+        edges.append(max(horizon, edges[-1] + 1e-9))
+    out: List[WindowReport] = []
+    for start, end in zip(edges, edges[1:]):
+        is_last = end == edges[-1]
+        arrived = [r for r in records
+                   if start <= r.arrival and (r.arrival < end or is_last)]
+        done = [r for r in records if r.finish_time > 0.0
+                and start <= r.finish_time
+                and (r.finish_time < end or is_last)]
+        ttfts = [r.ttft for r in done]
+        tpots = [r.tpot for r in done if r.gen_len > 1]
+        met = sum(1 for r in done if slo_met(r))
+        span = end - start
+        out.append(WindowReport(
+            start=start, end=end, arrivals=len(arrived),
+            finished=len(done),
+            rejected=sum(1 for r in arrived
+                         if getattr(r, "rejected", False)),
+            slo_met=met,
+            goodput_rps=met / span if span > 0 else 0.0,
+            ttft_mean=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            ttft_p95=p95(ttfts), tpot_p95=p95(tpots),
+            arrival_rate=len(arrived) / span if span > 0 else 0.0))
+    return out
+
+
+@dataclasses.dataclass
 class ResilienceReport:
     """Outcome of one faulted run (or an ensemble aggregate) — what a
     plan's service looked like while the cluster was degraded.
@@ -200,6 +286,15 @@ class SimulationReport:
     # fault-injection outcome: set only when the run (or an ensemble of
     # re-simulations) carried a non-empty FaultSchedule
     resilience: Optional[ResilienceReport] = None
+    # memory-threshold admission control (BatchingPolicy.admission_*)
+    admission_rejected: int = 0   # requests dropped at the watermark
+    admission_deferred: int = 0   # unique requests held at the watermark
+    # per-window metric timeline (simulate(window_s=...) or a dynamic
+    # run's epoch boundaries) — list of WindowReport
+    windows: Optional[List[WindowReport]] = None
+    # epoch-gated re-planning outcome (core/dynamic.ReconfigReport):
+    # itemized reconfiguration cost of a dynamic plan schedule
+    reconfig: Optional[object] = None
 
     @classmethod
     def infeasible(cls, plan_label: str) -> "SimulationReport":
@@ -231,6 +326,9 @@ class SimulationReport:
             line += f" refetch={self.kv_refetch_s:.2f}s"
         if self.goodput_rps > 0:
             line += f" goodput={self.goodput_rps:.2f}req/s"
+        if self.admission_rejected or self.admission_deferred:
+            line += (f" admission(rej={self.admission_rejected}, "
+                     f"defer={self.admission_deferred})")
         return line
 
     def __str__(self) -> str:
@@ -245,4 +343,8 @@ class SimulationReport:
             lines.append("  " + cr.summary())
         if self.resilience is not None:
             lines.append("  resilience: " + self.resilience.summary())
+        if self.reconfig is not None:
+            lines.append("  reconfig: " + self.reconfig.summary())
+        for w in self.windows or ():
+            lines.append("  " + w.summary())
         return "\n".join(lines)

@@ -102,6 +102,11 @@ class MultiFidelitySearch:
     same exact simulators for the final ranking — only the sweep over
     non-survivors is replaced by the fluid surrogate."""
 
+    # quarter-window deviation (Poisson standard errors) above which a
+    # trace is treated as non-stationary — ~2 is ordinary Poisson noise,
+    # so 6 only trips on flagrant diurnal/burst structure
+    NONSTATIONARY_Z = 6.0
+
     def __init__(self, search: ApexSearch, frontier_k: int = 8,
                  slo_slack: float = 1.5,
                  screen_objectives: Optional[Sequence[str]] = None,
@@ -241,7 +246,9 @@ class MultiFidelitySearch:
                preemption=None,
                slo_classes=None,
                halving: bool = True,
-               faults=None) -> MultiFidelityResult:
+               faults=None,
+               nonstationary: str = "raise",
+               dynamic=None) -> MultiFidelityResult:
         """Same signature semantics as ``ApexSearch.search``; returns a
         ``MultiFidelityResult`` whose ``result`` ranks only the confirmed
         finalists (``result.all_reports`` holds one EXACT full-trace
@@ -265,7 +272,22 @@ class MultiFidelitySearch:
         prefix rungs would rank on truncated fault windows — so the
         ladder orders candidates by nominal service and the finalists
         pay for the seeded faulted re-simulations that
-        ``objective="degraded_goodput"`` ranks on."""
+        ``objective="degraded_goodput"`` ranks on.
+
+        The fluid surrogate assumes ONE arrival rate; on a markedly
+        non-stationary trace (``TraceSummary.nonstationarity`` above
+        ~6 Poisson standard errors — diurnal or bursty arrivals) it
+        would silently mis-rank.  ``nonstationary`` picks the response:
+        ``"raise"`` (default) refuses with a clear error, ``"peak"``
+        screens conservatively at the busiest quarter-window's arrival
+        rate, ``"ignore"`` keeps the mean-rate screening (exact rungs
+        and confirmation still correct the ranking downstream).
+
+        ``dynamic`` (a ``core.dynamic.DynamicSpec``) extends the final
+        confirmed ranking with epoch-gated plan-switching schedules over
+        the finalists, exactly as in ``ApexSearch.search(dynamic=...)``
+        — only exact-confirmed plans enter timetables, so the surrogate
+        never ranks a switch."""
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; choose "
                              f"one of {sorted(OBJECTIVES)}")
@@ -294,6 +316,25 @@ class MultiFidelitySearch:
         summaries = TraceSummary.of_prefixes(
             ordered, self.rungs if halving else ())
         ts = summaries[1.0]
+        if nonstationary not in ("raise", "peak", "ignore"):
+            raise ValueError(f"unknown nonstationary mode "
+                             f"{nonstationary!r} (raise|peak|ignore)")
+        if ts.nonstationarity > self.NONSTATIONARY_Z:
+            if nonstationary == "raise":
+                raise ValueError(
+                    f"trace is non-stationary (z={ts.nonstationarity:.1f} "
+                    f"Poisson standard errors across quarter-windows, "
+                    f"threshold {self.NONSTATIONARY_Z:g}): the fluid "
+                    "surrogate screens on ONE arrival rate and would "
+                    "mis-rank.  Pass nonstationary='peak' to screen at "
+                    "the busiest window's rate, 'ignore' to accept "
+                    "mean-rate screening, or use ApexSearch.search "
+                    "(exact, optionally with dynamic=DynamicSpec(...)).")
+            if nonstationary == "peak":
+                summaries = {f: dataclasses.replace(
+                    s, arrival_rate=max(s.arrival_rate, s.peak_rate))
+                    for f, s in summaries.items()}
+                ts = summaries[1.0]
 
         # ---- phase 1: fluid screening (cheap enough to stay serial) ----
         t0 = _time.perf_counter()
@@ -429,6 +470,13 @@ class MultiFidelitySearch:
             objective=objective,
             slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
             cache_hits=hits, cache_misses=misses)
+        if dynamic is not None and not dynamic.is_empty:
+            # schedules draw only on the exact-confirmed finalists
+            # (reports align with ``survivors`` positions)
+            result = inner._extend_dynamic(
+                result, dynamic, [candidates[i] for i in survivors],
+                kv_model, requests, obj, policy=policy,
+                preemption=preemption, t0=t0)
         return MultiFidelityResult(
             result=result, num_candidates=n_cand,
             num_survivors=len(survivors),

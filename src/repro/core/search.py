@@ -429,7 +429,8 @@ class ApexSearch:
                jobs: int = 1,
                preemption=None,
                slo_classes=None,
-               faults=None) -> SearchResult:
+               faults=None,
+               dynamic=None) -> SearchResult:
         """Rank plans under ``objective``; with ``disaggregated=True`` the
         candidate set is the union of colocated schemes and two-pool
         disaggregated schemes (disagg/), scored by the same simulator
@@ -477,6 +478,18 @@ class ApexSearch:
         and attaches the ensemble-aggregated ``ResilienceReport`` to its
         nominal report — required by ``objective="degraded_goodput"``,
         which ranks plans by how much SLO goodput survives the draws.
+
+        ``dynamic`` (a ``core.dynamic.DynamicSpec``) extends the ranking
+        with epoch-gated plan SWITCHING: schedules over the static
+        sweep's top-k plans are simulated through
+        ``DynamicPlanSimulator`` (reconfiguration costs itemized in each
+        report's ``reconfig``) and ranked under the same objective and
+        SLO filters, so the winner may be a switching timetable — or the
+        best static plan, an honest negative result.  An empty spec
+        returns the static result unchanged (bit-identical to
+        ``dynamic=None``).  Dynamic candidates are evaluated fault-free;
+        to rank plan switching UNDER faults, drive
+        ``DynamicPlanSimulator`` with a ``fault_schedule`` directly.
         """
         t0 = _time.perf_counter()
         if objective not in OBJECTIVES:
@@ -532,14 +545,60 @@ class ApexSearch:
                 "no feasible plan found (memory or SLO constraints too "
                 f"tight) among {len(candidates)} schemes")
         best_plan, _ = self.make_simulator(candidates[best_idx], kv_model)
-        return SearchResult(best=reports[best_idx], best_plan=best_plan,
-                            all_reports=reports,
-                            num_schemes=len(candidates),
-                            num_feasible=sum(r.feasible for r in reports),
-                            search_seconds=_time.perf_counter() - t0,
-                            objective=objective,
-                            slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
-                            cache_hits=hits, cache_misses=misses)
+        result = SearchResult(best=reports[best_idx], best_plan=best_plan,
+                              all_reports=reports,
+                              num_schemes=len(candidates),
+                              num_feasible=sum(r.feasible for r in reports),
+                              search_seconds=_time.perf_counter() - t0,
+                              objective=objective,
+                              slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
+                              cache_hits=hits, cache_misses=misses)
+        if dynamic is None or dynamic.is_empty:
+            return result
+        return self._extend_dynamic(result, dynamic, candidates, kv_model,
+                                    requests, obj, policy=policy,
+                                    preemption=preemption, t0=t0)
+
+    def _extend_dynamic(self, result: SearchResult, spec, candidates,
+                        kv_model, requests, obj,
+                        policy=None, preemption=None,
+                        t0: float = 0.0) -> SearchResult:
+        """Rank {static winners} ∪ {epoch schedules over the top-k static
+        plans} under one objective (``search(dynamic=...)``'s second
+        phase).  Schedule plan indices are ranks into the top-k list."""
+        from .dynamic import DynamicPlanSimulator, build_schedules
+        ranked = sorted((r for r in result.all_reports
+                         if result.admissible(r)), key=obj)[:spec.top_k]
+        by_label = {r.plan_label: i for i, r in enumerate(result.all_reports)}
+        top_cands = [candidates[by_label[r.plan_label]] for r in ranked]
+        if spec.mechanism == "migrate":
+            top_cands = [c for c in top_cands if c[0] == "colocated"]
+        if len(top_cands) < 2:
+            return result          # nothing to switch between
+        horizon = max((r.arrival for r in requests), default=0.0)
+        schedules = build_schedules(spec, requests, horizon, len(top_cands))
+        dyn_reports = []
+        for sched in schedules:
+            dyn = DynamicPlanSimulator(self, top_cands, sched,
+                                       kv_model=kv_model,
+                                       mechanism=spec.mechanism)
+            dyn_reports.append(dyn.simulate(
+                requests, policy=policy, preemption=preemption))
+        all_reports = result.all_reports + dyn_reports
+        merged = dataclasses.replace(
+            result, all_reports=all_reports,
+            num_schemes=result.num_schemes + len(dyn_reports),
+            num_feasible=sum(r.feasible for r in all_reports),
+            search_seconds=_time.perf_counter() - t0)
+        winners = [r for r in all_reports if merged.admissible(r)]
+        if winners:
+            best = min(winners, key=obj)
+            if best.plan_label != result.best.plan_label:
+                # a switching timetable won: best_plan stays the epoch-0
+                # static plan (the deployment you boot into); the full
+                # timetable lives in best.reconfig + the plan label
+                merged = dataclasses.replace(merged, best=best)
+        return merged
 
     def _evaluate_ranked(self, eval_one: Callable[[int], tuple], n: int,
                          obj: Objective,

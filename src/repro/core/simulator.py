@@ -34,7 +34,8 @@ from .cluster import NetworkLevel, host_link
 from .engine import Engine, SharedCostStore, StepCostCache
 from .ir import Workload
 from .mapper import ExecutionPlan
-from .metrics import SimulationReport, p95, request_metrics
+from .metrics import SimulationReport, p95, request_metrics, \
+    windowed_metrics
 from .profiles import CollectiveModel, ProfileStore
 from .quant import get_format
 from .templates import reshard_collectives
@@ -130,6 +131,8 @@ class PlanSimulator:
         # last simulate()'s StepCostCache counters (cost-reuse telemetry)
         self.cache_stats = {"hits": 0, "misses": 0, "entries": 0,
                             "evictions": 0}
+        # set by simulate(stop_at=...): unfinished work at the epoch stop
+        self.carryover: Optional[dict] = None
         # distinct attention windows in the model (for Workload building)
         self.windows = sorted(
             {getattr(c, "window", None) for c in self.scheme.model.block.cells},
@@ -267,13 +270,39 @@ class PlanSimulator:
 
     # -- full-trace simulation --------------------------------------------------
 
+    @staticmethod
+    def _collect_carryover(pool) -> dict:
+        """Unfinished requests at an epoch stop, for the next segment.
+
+        ``{rid: (request, snapshot, partial_record)}`` where ``snapshot``
+        is ``(prefill_done, generated, first_token_time)`` for requests
+        with live or swap-parked KV (None for queued, not-yet-started
+        ones), and ``partial_record`` carries the progress stats accrued
+        so far (preemptions, refetch/swap delays, a stamped first-token
+        time) for the controller's record merge."""
+        carry: dict = {}
+        for rep in pool.replicas:
+            for a in rep.active:
+                rid = a.req.rid
+                carry[rid] = (a.req,
+                              (a.prefill_done, a.generated,
+                               a.first_token_time),
+                              rep.records.get(rid))
+            for req in rep.pending:
+                snap = rep.swapped.get(req.rid)
+                carry[req.rid] = (req, snap, rep.records.get(req.rid))
+        return carry
+
     def simulate(self, requests: Sequence[Request],
                  policy: Optional[BatchingPolicy] = None,
                  keep_records: bool = False,
                  preemption=None,
                  swap_cost: Optional[SwapCost] = None,
                  slo_classes=None,
-                 faults=None) -> SimulationReport:
+                 faults=None,
+                 window_s: Optional[float] = None,
+                 stop_at: Optional[float] = None,
+                 carry_in: Optional[dict] = None) -> SimulationReport:
         """``preemption`` selects the KV-overflow policy (menu string or
         ``PreemptionPolicy``; None = sacrifice + recent-first, the
         golden-pinned default); ``swap_cost`` overrides the PCIe host-link
@@ -284,7 +313,24 @@ class PlanSimulator:
         stragglers into the run; the report then carries a
         ``resilience`` block, and unfinished requests (stranded on a dead
         replica) are dropped from the latency stats.  An empty schedule
-        is bit-identical to ``faults=None``."""
+        is bit-identical to ``faults=None``.
+
+        ``window_s`` attaches a per-window metric timeline
+        (``metrics.windowed_metrics``) to the report — the lens for
+        non-stationary traces, where whole-run aggregates hide the peak
+        hour.  Admission-rejected requests (see
+        ``BatchingPolicy.admission_watermark``) are excluded from the
+        latency/goodput stats and counted in ``admission_rejected``.
+
+        ``stop_at`` halts the run at an epoch boundary (core/dynamic.py):
+        the engine stops at that instant, unfinished requests are dropped
+        from the stats, and ``self.carryover`` maps each unfinished rid to
+        ``(request, progress_snapshot_or_None, partial_record_or_None)``
+        so the next plan segment can resume them.  ``carry_in`` is the
+        inverse: ``{rid: (prefill_done, generated, first_token_time)}``
+        snapshots pre-seeded as swap-parked progress, restored without
+        recompute when the rid (which must be in ``requests``) is
+        admitted."""
         policy = policy or BatchingPolicy()
         scheme = self.scheme
         requests = retag_slo(requests, slo_classes)
@@ -310,9 +356,21 @@ class PlanSimulator:
             preemption=preemption,
             swap_cost=swap_cost or default_swap_cost(
                 scheme, power=self.coll.power))
+        if carry_in:
+            # migrated in-flight progress: park each snapshot on the
+            # replica that owns the rid — admission restores it through
+            # the swap-in path (no recompute, no first-token re-stamp)
+            for rep in pool.replicas:
+                for rid, snap in carry_in.items():
+                    if rid in rep.records:
+                        rep.swapped[rid] = tuple(snap)
         if faulted:
             engine.install_faults(faults)
+        if stop_at is not None:
+            engine.install_epoch(stop_at, lambda t: engine.stop())
         engine.run()
+        self.carryover = (self._collect_carryover(pool)
+                          if stop_at is not None else None)
         results = pool.results()
         self.cache_stats = cache.stats()
 
@@ -323,12 +381,15 @@ class PlanSimulator:
         pool.replay_accumulators(self)
 
         all_records = [rec for res in results for rec in res.records]
-        if faulted:
-            # a request stranded on a dead replica never finished —
-            # excluded from latency/goodput stats, counted as dropped
-            records = [r for r in all_records if r.finish_time > 0.0]
+        served = [r for r in all_records if not r.rejected]
+        if faulted or stop_at is not None:
+            # a request stranded on a dead replica (or still in flight at
+            # an epoch stop) never finished — excluded from the
+            # latency/goodput stats; epoch stops hand it to the next
+            # segment via ``self.carryover``
+            records = [r for r in served if r.finish_time > 0.0]
         else:
-            records = all_records
+            records = served
         total_time = max(res.total_time for res in results)
         total_energy = sum(res.total_energy for res in results)
         gen_tokens = sum(r.gen_len for r in records)
@@ -344,8 +405,10 @@ class PlanSimulator:
         resilience = None
         if faulted:
             from .faults import build_resilience
+            # admission-rejected requests are accounted separately — they
+            # are deliberate drops, not fault-induced ones
             resilience = build_resilience(
-                faults, all_records, total_time,
+                faults, served, total_time,
                 {"serve": scheme.model_dp}, engine.fault_requeues)
 
         return SimulationReport(
@@ -365,4 +428,9 @@ class PlanSimulator:
             kv_swap_s=sum(r.kv_swap_s for r in results),
             kv_refetch_s=sum(r.kv_refetch_s for r in results),
             resilience=resilience,
+            admission_rejected=sum(r.admission_rejected for r in results),
+            admission_deferred=sum(r.admission_deferred for r in results),
+            windows=(windowed_metrics(records, window_s=window_s,
+                                      horizon=total_time)
+                     if window_s is not None else None),
             **request_metrics(records, total_time))

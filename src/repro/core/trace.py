@@ -26,10 +26,11 @@ path byte-identical.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import random
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,35 +109,309 @@ class _GeneratorDraws:
     def lognormvariate(self, mu: float, sigma: float) -> float:
         return float(self.gen.lognormal(mu, sigma))
 
+    def random(self) -> float:
+        return float(self.gen.random())
 
-def synthesize_trace(spec: TraceSpec, arrival_rate: float,
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+class ArrivalProcess:
+    """A (possibly non-stationary) arrival-time process.
+
+    ``iter_arrivals(rng)`` yields absolute arrival times, drawing from
+    ``rng`` lazily — exactly one draw sequence per arrival — so a
+    seeded generator produces the same trace in every process.  Every
+    rate-accepting entry point (``synthesize_trace``, ``get_trace``,
+    ``ClassTraffic``, ``mixed_trace``) takes an ``ArrivalProcess`` in
+    place of the legacy float rate; a bare float means
+    ``ConstantRate(rate)``, whose draw sequence is byte-identical to
+    the pre-process code path (golden-pinned).
+    """
+
+    #: True for processes whose rate never varies in time.
+    stationary: bool = False
+
+    def iter_arrivals(self, rng):
+        raise NotImplementedError
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous (or, for doubly-stochastic processes, mean)
+        arrival rate at absolute time ``t``."""
+        raise NotImplementedError
+
+    def peak_rate(self) -> float:
+        """An upper bound on the instantaneous rate (thinning bound /
+        conservative capacity-planning rate)."""
+        raise NotImplementedError
+
+    def mean_rate(self, horizon_s: float) -> float:
+        """Time-averaged rate over ``[0, horizon_s]``."""
+        if horizon_s <= 0:
+            raise ValueError(f"horizon must be positive, got {horizon_s}")
+        k = 256
+        dt = horizon_s / k
+        return sum(self.rate_at((i + 0.5) * dt) for i in range(k)) / k
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantRate(ArrivalProcess):
+    """Stationary Poisson arrivals — the legacy model, bit-identical."""
+
+    rate: float
+    stationary = True
+
+    def __post_init__(self):
+        if self.rate <= 0:
+            raise ValueError(
+                f"arrival_rate must be positive, got {self.rate}")
+
+    def iter_arrivals(self, rng):
+        t = 0.0
+        while True:
+            t += rng.expovariate(self.rate)
+            yield t
+
+    def rate_at(self, t: float) -> float:
+        return self.rate
+
+    def peak_rate(self) -> float:
+        return self.rate
+
+    def mean_rate(self, horizon_s: float) -> float:
+        return self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class PiecewiseRate(ArrivalProcess):
+    """Piecewise-constant rate: ``rates[i]`` req/s from ``starts[i]``
+    until ``starts[i+1]``; the last rate holds forever.  Arrivals are
+    drawn by exact hazard inversion (one unit-exponential draw per
+    arrival — no thinning, no discretization), so the draw count is
+    deterministic and seeded traces replay bit-identically."""
+
+    starts: Tuple[float, ...]
+    rates: Tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "starts", tuple(self.starts))
+        object.__setattr__(self, "rates", tuple(self.rates))
+        if not self.starts or len(self.starts) != len(self.rates):
+            raise ValueError("starts and rates must be equal-length and "
+                             f"non-empty, got {len(self.starts)} starts / "
+                             f"{len(self.rates)} rates")
+        if self.starts[0] != 0.0:
+            raise ValueError(f"first segment must start at 0, "
+                             f"got {self.starts[0]}")
+        if any(b >= a for a, b in zip(self.starts[1:], self.starts)):
+            raise ValueError(f"segment starts must be strictly increasing, "
+                             f"got {self.starts}")
+        if any(r < 0 for r in self.rates):
+            raise ValueError(f"rates must be non-negative, got {self.rates}")
+        if self.rates[-1] <= 0:
+            raise ValueError("final segment rate must be positive (it "
+                             "holds forever and must eventually produce "
+                             f"each arrival), got {self.rates[-1]}")
+
+    def iter_arrivals(self, rng):
+        t = 0.0
+        idx = 0
+        while True:
+            e = rng.expovariate(1.0)     # unit-exponential hazard target
+            while True:
+                rate = self.rates[idx]
+                end = self.starts[idx + 1] \
+                    if idx + 1 < len(self.starts) else math.inf
+                if rate > 0:
+                    dt = e / rate
+                    if t + dt <= end:
+                        t += dt
+                        break
+                    e -= (end - t) * rate
+                t = end
+                idx += 1
+            yield t
+
+    def rate_at(self, t: float) -> float:
+        return self.rates[max(0, bisect.bisect_right(self.starts, t) - 1)]
+
+    def peak_rate(self) -> float:
+        return max(self.rates)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalRate(ArrivalProcess):
+    """Sinusoidal diurnal swing:
+    ``rate(t) = base * (1 + amplitude * sin(2*pi*(t - phase)/period))``.
+    Drawn by Lewis–Shedler thinning against the peak-rate bound — one
+    exponential + one uniform draw per proposal."""
+
+    base_rate: float
+    amplitude: float = 0.5
+    period_s: float = 86400.0
+    phase_s: float = 0.0
+
+    def __post_init__(self):
+        if self.base_rate <= 0:
+            raise ValueError(
+                f"base_rate must be positive, got {self.base_rate}")
+        if not 0.0 <= self.amplitude <= 1.0:
+            raise ValueError(
+                f"amplitude must be in [0, 1], got {self.amplitude}")
+        if self.period_s <= 0:
+            raise ValueError(
+                f"period_s must be positive, got {self.period_s}")
+
+    def iter_arrivals(self, rng):
+        bound = self.base_rate * (1.0 + self.amplitude)
+        t = 0.0
+        while True:
+            t += rng.expovariate(bound)
+            if rng.random() * bound <= self.rate_at(t):
+                yield t
+
+    def rate_at(self, t: float) -> float:
+        return self.base_rate * (1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t - self.phase_s) / self.period_s))
+
+    def peak_rate(self) -> float:
+        return self.base_rate * (1.0 + self.amplitude)
+
+    def mean_rate(self, horizon_s: float) -> float:
+        if horizon_s <= 0:
+            raise ValueError(f"horizon must be positive, got {horizon_s}")
+        # exact: integral of base*(1 + a*sin(...)) has closed form
+        w = 2.0 * math.pi / self.period_s
+        integral = self.base_rate * (
+            horizon_s + (self.amplitude / w)
+            * (math.cos(-w * self.phase_s)
+               - math.cos(w * (horizon_s - self.phase_s))))
+        return integral / horizon_s
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstProcess(ArrivalProcess):
+    """MMPP-style on/off bursts: a two-phase Markov-modulated Poisson
+    process alternating between a quiet phase at ``base_rate`` and a
+    burst phase at ``burst_rate``, with exponentially-distributed phase
+    holding times.  Arrivals inside each phase are drawn by exact
+    hazard inversion, with phase-transition draws interleaved
+    deterministically, so seeded traces replay bit-identically."""
+
+    base_rate: float
+    burst_rate: float
+    mean_burst_s: float
+    mean_gap_s: float
+    start_in_burst: bool = False
+
+    def __post_init__(self):
+        if self.base_rate < 0:
+            raise ValueError(
+                f"base_rate must be non-negative, got {self.base_rate}")
+        if self.burst_rate <= 0:
+            raise ValueError(
+                f"burst_rate must be positive, got {self.burst_rate}")
+        if self.burst_rate < self.base_rate:
+            raise ValueError(
+                f"burst_rate ({self.burst_rate}) must be >= base_rate "
+                f"({self.base_rate})")
+        if self.mean_burst_s <= 0 or self.mean_gap_s <= 0:
+            raise ValueError(
+                f"phase means must be positive, got burst="
+                f"{self.mean_burst_s} gap={self.mean_gap_s}")
+
+    def _hold(self, in_burst: bool) -> float:
+        return self.mean_burst_s if in_burst else self.mean_gap_s
+
+    def iter_arrivals(self, rng):
+        t = 0.0
+        in_burst = self.start_in_burst
+        phase_end = t + rng.expovariate(1.0 / self._hold(in_burst))
+        while True:
+            e = rng.expovariate(1.0)
+            while True:
+                rate = self.burst_rate if in_burst else self.base_rate
+                if rate > 0:
+                    dt = e / rate
+                    if t + dt <= phase_end:
+                        t += dt
+                        break
+                    e -= (phase_end - t) * rate
+                t = phase_end
+                in_burst = not in_burst
+                phase_end = t + rng.expovariate(1.0 / self._hold(in_burst))
+            yield t
+
+    def rate_at(self, t: float) -> float:
+        """The duty-cycled MEAN rate — the modulating phase chain is
+        part of the random draw, so the realized instantaneous rate is
+        not a function of ``t`` alone."""
+        total = self.mean_burst_s + self.mean_gap_s
+        return (self.burst_rate * self.mean_burst_s
+                + self.base_rate * self.mean_gap_s) / total
+
+    def peak_rate(self) -> float:
+        return self.burst_rate
+
+    def mean_rate(self, horizon_s: float) -> float:
+        return self.rate_at(0.0)
+
+
+RateLike = Union[float, int, ArrivalProcess]
+
+
+def as_arrival_process(rate: RateLike) -> ArrivalProcess:
+    """Coerce a float rate (legacy API) or pass through a process."""
+    if isinstance(rate, ArrivalProcess):
+        return rate
+    if not isinstance(rate, (int, float)) or isinstance(rate, bool):
+        raise TypeError(f"arrival_rate must be a positive number or an "
+                        f"ArrivalProcess, got {rate!r}")
+    return ConstantRate(float(rate))
+
+
+def synthesize_trace(spec: TraceSpec, arrival_rate: RateLike,
                      seed: int = 0, num_requests: Optional[int] = None,
                      max_len: int = 131072, source_len: int = 0,
                      rng=None, slo_class: SLOClass = DEFAULT_SLO
                      ) -> List[Request]:
-    """Poisson arrivals at ``arrival_rate`` req/s, log-normal lengths.
+    """Arrivals from ``arrival_rate`` (a req/s float = stationary
+    Poisson, or any ``ArrivalProcess``), log-normal lengths.
 
     ``rng`` overrides the default seeded ``random.Random``: pass either a
     ``random.Random`` or an explicit ``numpy.random.Generator`` (adapted
     transparently).  Two calls with equal-state generators produce
     byte-identical traces — the determinism contract parallel search
     workers (``jobs=N``) rely on when each regenerates its own copy.
-    The default path is unchanged (same draws as before).
+    The default path is unchanged (same draws as before): a float rate
+    routes through ``ConstantRate``, whose per-arrival draw sequence is
+    identical to the legacy inline loop (golden-pinned).
 
     ``slo_class`` tags every request with one tenant class (see
     ``synthesize_mixed_trace`` for multi-class traffic).
+
+    Raises ``ValueError`` on non-positive ``arrival_rate`` or
+    ``num_requests`` instead of silently emitting degenerate traces.
     """
+    process = as_arrival_process(arrival_rate)
+    if num_requests is not None and num_requests <= 0:
+        raise ValueError(
+            f"num_requests must be positive, got {num_requests}")
     if rng is None:
         rng = random.Random(seed)
     elif not hasattr(rng, "expovariate"):
         rng = _GeneratorDraws(rng)       # numpy Generator
-    n = num_requests or spec.num_requests
+    n = spec.num_requests if num_requests is None else num_requests
+    if n <= 0:
+        raise ValueError(f"trace spec {spec.name!r} has non-positive "
+                         f"num_requests {n}")
     cmu, csig = _lognormal_params(spec.ctx_mean, spec.ctx_std)
     gmu, gsig = _lognormal_params(spec.gen_mean, spec.gen_std)
     out: List[Request] = []
-    t = 0.0
+    arrivals = process.iter_arrivals(rng)
     for i in range(n):
-        t += rng.expovariate(arrival_rate)
+        t = next(arrivals)
         ctx = max(1, min(max_len, int(round(rng.lognormvariate(cmu, csig)))))
         gen = max(1, min(max_len, int(round(rng.lognormvariate(gmu, gsig)))))
         out.append(Request(rid=i, arrival=t, context_len=ctx, gen_len=gen,
@@ -144,7 +419,7 @@ def synthesize_trace(spec: TraceSpec, arrival_rate: float,
     return out
 
 
-def get_trace(name: str, arrival_rate: float = 0.5, seed: int = 0,
+def get_trace(name: str, arrival_rate: RateLike = 0.5, seed: int = 0,
               num_requests: Optional[int] = None,
               source_len: int = 0, rng=None,
               slo_class: SLOClass = DEFAULT_SLO) -> List[Request]:
@@ -165,7 +440,7 @@ class ClassTraffic:
     distribution it draws from, how fast it arrives, and its SLO."""
 
     spec: TraceSpec
-    arrival_rate: float            # this class's own Poisson rate (req/s)
+    arrival_rate: RateLike         # this class's own rate or ArrivalProcess
     slo: SLOClass
     num_requests: Optional[int] = None
     source_len: int = 0
@@ -174,14 +449,22 @@ class ClassTraffic:
 def synthesize_mixed_trace(components: Sequence[ClassTraffic],
                            seed: int = 0, max_len: int = 131072
                            ) -> List[Request]:
-    """Merge independently-seeded per-class Poisson streams into one
-    trace (e.g. chat + summarization sharing a deployment).
+    """Merge independently-seeded per-class arrival streams into one
+    trace (e.g. chat + summarization sharing a deployment).  Each
+    component's ``arrival_rate`` may be a float (stationary Poisson) or
+    any ``ArrivalProcess`` (e.g. a diurnal chat class over a piecewise
+    batch class).
 
     Each component draws from its own sub-seeded generator
     (``seed + 1000 * index``) so adding or re-ordering classes never
     perturbs another class's draws; the merged trace is sorted by
     arrival (ties by class order) and re-numbered with contiguous rids.
+
+    Raises ``ValueError`` on an empty ``components`` sequence.
     """
+    if not components:
+        raise ValueError("components must be a non-empty sequence of "
+                         "ClassTraffic")
     streams: List[List[Request]] = []
     for k, comp in enumerate(components):
         streams.append(synthesize_trace(
@@ -196,7 +479,10 @@ def synthesize_mixed_trace(components: Sequence[ClassTraffic],
 def mixed_trace(components: Sequence[tuple], seed: int = 0,
                 max_len: int = 131072) -> List[Request]:
     """Convenience front for ``synthesize_mixed_trace``: each component
-    is ``(trace_name, arrival_rate, slo_class[, num_requests])``."""
+    is ``(trace_name, arrival_rate, slo_class[, num_requests])``, where
+    ``arrival_rate`` is a float or any ``ArrivalProcess``."""
+    if not components:
+        raise ValueError("components must be a non-empty sequence")
     parts = []
     for comp in components:
         name, rate, slo = comp[0], comp[1], comp[2]

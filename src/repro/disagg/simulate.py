@@ -46,7 +46,8 @@ from typing import Dict, List, Optional, Sequence
 from ..core.batching import BatchingPolicy, RequestRecord, SwapCost
 from ..core.engine import Engine, SharedCostStore, SharedLink
 from ..core.ir import Workload
-from ..core.metrics import SimulationReport, request_metrics
+from ..core.metrics import SimulationReport, request_metrics, \
+    windowed_metrics
 from ..core.profiles import AnalyticBackend, CollectiveModel, ProfileStore
 from ..core.simulator import PlanSimulator, default_swap_cost
 from ..core.trace import Request, retag_slo
@@ -137,7 +138,8 @@ class DisaggSimulator:
                  preemption=None,
                  swap_cost: Optional[SwapCost] = None,
                  slo_classes=None,
-                 faults=None) -> SimulationReport:
+                 faults=None,
+                 window_s: Optional[float] = None) -> SimulationReport:
         """``preemption`` drives BOTH pools' KV-overflow handling (menu
         string or ``PreemptionPolicy``; None = sacrifice + recent-first).
         Under ``swap`` a decode-pool victim's KV parks on the host —
@@ -152,7 +154,12 @@ class DisaggSimulator:
         transfer times stretch inside them); the report then carries a
         ``resilience`` block.  A decode-pool failure's victims re-fetch
         their prompt KV through the prefill pool, exactly like
-        sacrificed preemptees."""
+        sacrificed preemptees.
+
+        ``window_s`` attaches a per-window metric timeline; per-pool
+        policies may carry ``admission_watermark`` gates — rejected
+        requests are excluded from the latency stats and counted in
+        ``admission_rejected``."""
         plan = self.plan
         requests = retag_slo(requests, slo_classes)
         faulted = faults is not None and not faults.empty
@@ -376,6 +383,7 @@ class DisaggSimulator:
             rec = RequestRecord(rid, req.arrival, req.context_len,
                                 req.gen_len, slo_class=req.slo_class)
             rec.first_token_time = pre_rec.first_token_time
+            rec.rejected = pre_rec.rejected
             dec_rec = dec_records.get(rid)
             if dec_rec is not None:
                 rec.finish_time = dec_rec.finish_time
@@ -383,6 +391,7 @@ class DisaggSimulator:
                 rec.refetch_s = dec_rec.refetch_s
                 rec.swaps = pre_rec.swaps + dec_rec.swaps
                 rec.swap_s = pre_rec.swap_s + dec_rec.swap_s
+                rec.rejected = rec.rejected or dec_rec.rejected
             else:                      # gen_len == 1: done at prefill
                 rec.finish_time = pre_rec.finish_time
                 rec.preemptions = pre_rec.preemptions
@@ -390,6 +399,7 @@ class DisaggSimulator:
                 rec.swap_s = pre_rec.swap_s
             merged.append(rec)
 
+        merged = [r for r in merged if not r.rejected]
         all_merged = merged
         if faulted:
             # stranded on a dead replica with no survivor: never finished
@@ -438,4 +448,9 @@ class DisaggSimulator:
             kv_swap_s=sum(r.kv_swap_s for r in results),
             kv_refetch_s=sum(r.kv_refetch_s for r in results),
             resilience=resilience,
+            admission_rejected=sum(r.admission_rejected for r in results),
+            admission_deferred=sum(r.admission_deferred for r in results),
+            windows=(windowed_metrics(merged, window_s=window_s,
+                                      horizon=total_time)
+                     if window_s is not None else None),
             **request_metrics(merged, total_time))

@@ -1,0 +1,419 @@
+"""Non-stationary traffic + epoch-gated dynamic re-planning tests.
+
+Covers the PR's load-bearing invariants:
+
+  * arrival processes — stationary ``ConstantRate`` is bit-identical to
+    the legacy float path, every variant replays under its seed, and
+    input validation refuses nonsense;
+  * memory-threshold admission control — defer holds-then-serves,
+    reject drops-and-counts, and the knobs validate;
+  * windowed metrics — hand-computable 3-request timeline;
+  * the dynamic controller — a static (one-epoch) schedule through
+    ``DynamicPlanSimulator`` reproduces the plain simulator's records
+    bit-for-bit, both mechanisms conserve requests, migrate carries
+    in-flight progress, and every reconfiguration is billed;
+  * search integration — ``dynamic=DynamicSpec()`` (empty) is
+    bit-identical to ``dynamic=None``; a non-empty spec adds
+    reconfig-bearing candidates under the same objective;
+  * the fluid guard — non-stationary traces trip the surrogate's
+    z-score and ``MultiFidelitySearch`` refuses (or screens at peak).
+"""
+
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import (ApexSearch, BatchingPolicy, MultiFidelitySearch,
+                        get_trace, h100_node, ir_from_hf_config)
+from repro.core.dynamic import (DynamicPlanSimulator, DynamicSpec,
+                                EpochSchedule, build_schedules,
+                                fault_schedule, reactive_schedule)
+from repro.core.engine import Engine
+from repro.core.faults import FaultSchedule, ReplicaFault
+from repro.core.fluid import TraceSummary
+from repro.core.metrics import windowed_metrics
+from repro.core.trace import (ArrivalProcess, BurstProcess, ConstantRate,
+                              DiurnalRate, PiecewiseRate,
+                              as_arrival_process, synthesize_trace)
+
+TINY = dict(hidden_size=256, num_hidden_layers=4, num_attention_heads=8,
+            num_key_value_heads=4, intermediate_size=1024, vocab_size=1024)
+
+
+@pytest.fixture(scope="module")
+def search():
+    return ApexSearch(ir_from_hf_config(TINY, name="tiny"), h100_node(8))
+
+
+@pytest.fixture(scope="module")
+def cands(search):
+    return search.candidates(quant="fp16")
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_constant_rate_bit_identical_to_float():
+    a = get_trace("summarization", arrival_rate=0.5, seed=7,
+                  num_requests=24)
+    b = get_trace("summarization", arrival_rate=ConstantRate(0.5), seed=7,
+                  num_requests=24)
+    assert [dataclasses.astuple(r) for r in a] == \
+           [dataclasses.astuple(r) for r in b]
+
+
+@pytest.mark.parametrize("proc", [
+    ConstantRate(4.0),
+    PiecewiseRate(starts=(0.0, 5.0), rates=(1.0, 16.0)),
+    DiurnalRate(base_rate=4.0, amplitude=0.8, period_s=60.0),
+    BurstProcess(base_rate=1.0, burst_rate=32.0, mean_burst_s=2.0,
+                 mean_gap_s=5.0),
+], ids=["constant", "piecewise", "diurnal", "burst"])
+def test_arrival_variants_deterministic_under_seed(proc):
+    a = get_trace("chat", arrival_rate=proc, seed=11, num_requests=40)
+    b = get_trace("chat", arrival_rate=proc, seed=11, num_requests=40)
+    assert [dataclasses.astuple(r) for r in a] == \
+           [dataclasses.astuple(r) for r in b]
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+    assert all(t > 0 for t in arrivals)
+
+
+def test_piecewise_shifts_arrival_mass():
+    proc = PiecewiseRate(starts=(0.0, 10.0), rates=(8.0, 1.0))
+    reqs = get_trace("chat", arrival_rate=proc, seed=5,
+                     num_requests=120)
+    early = sum(1 for r in reqs if r.arrival < 10.0)
+    # ~80 expected in the rate-8 first 10 s under a stationary split of
+    # the same 120 arrivals; the piecewise process concentrates them
+    assert early > 60
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        ConstantRate(0.0)
+    with pytest.raises(ValueError):
+        PiecewiseRate(starts=(1.0, 2.0), rates=(1.0, 2.0))  # no t=0
+    with pytest.raises(ValueError):
+        PiecewiseRate(starts=(0.0, 2.0, 1.0), rates=(1.0, 1.0, 1.0))
+    with pytest.raises(ValueError):
+        PiecewiseRate(starts=(0.0, 1.0), rates=(1.0, 0.0))  # ends silent
+    with pytest.raises(ValueError):
+        DiurnalRate(base_rate=2.0, amplitude=1.5)
+    with pytest.raises(ValueError):
+        BurstProcess(base_rate=8.0, burst_rate=4.0, mean_burst_s=1.0,
+                     mean_gap_s=1.0)  # burst below base
+    with pytest.raises(TypeError):
+        as_arrival_process(True)
+    with pytest.raises(TypeError):
+        as_arrival_process("fast")
+    with pytest.raises(ValueError):
+        get_trace("chat", arrival_rate=1.0, num_requests=0)
+
+
+def test_mean_rate_and_rate_at():
+    pw = PiecewiseRate(starts=(0.0, 10.0), rates=(2.0, 6.0))
+    assert pw.rate_at(0.0) == 2.0
+    assert pw.rate_at(10.0) == 6.0
+    assert pw.mean_rate(20.0) == pytest.approx(4.0, rel=0.05)
+    di = DiurnalRate(base_rate=4.0, amplitude=0.5, period_s=100.0)
+    assert di.mean_rate(100.0) == pytest.approx(4.0, rel=1e-6)
+    assert di.peak_rate() == pytest.approx(6.0)
+    assert isinstance(as_arrival_process(2), ConstantRate)
+    assert isinstance(as_arrival_process(pw), ArrivalProcess)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def _admission_setup(search, cands, mode):
+    candidates, kv = cands
+    _, sim = search.make_simulator(candidates[0], kv)
+    cap = sim.scheme.kv_token_capacity(
+        search.cluster.device.hbm_bytes)
+    reqs = get_trace("summarization", arrival_rate=32.0, seed=3,
+                     num_requests=48)
+    pol = BatchingPolicy(admission_watermark=9000.0 / cap,
+                         admission_mode=mode)
+    return sim, reqs, pol
+
+
+def test_admission_defer_holds_then_serves_all(search, cands):
+    sim, reqs, pol = _admission_setup(search, cands, "defer")
+    rep = sim.simulate(reqs, policy=pol, keep_records=True)
+    assert rep.admission_deferred > 0
+    assert rep.admission_rejected == 0
+    assert len(rep.records) == len(reqs)            # nobody starves
+    assert all(r.finish_time > 0 for r in rep.records)
+
+
+def test_admission_reject_drops_and_counts(search, cands):
+    sim, reqs, pol = _admission_setup(search, cands, "reject")
+    rep = sim.simulate(reqs, policy=pol, keep_records=True)
+    assert rep.admission_rejected > 0
+    assert len(rep.records) == len(reqs) - rep.admission_rejected
+    assert all(r.ttft >= 0 for r in rep.records)
+
+
+def test_admission_validation(search, cands):
+    candidates, kv = cands
+    _, sim = search.make_simulator(candidates[0], kv)
+    reqs = get_trace("summarization", arrival_rate=4.0, seed=3,
+                     num_requests=4)
+    with pytest.raises(ValueError):
+        sim.simulate(reqs, policy=BatchingPolicy(admission_watermark=1.5))
+    with pytest.raises(ValueError):
+        sim.simulate(reqs, policy=BatchingPolicy(
+            admission_watermark=0.5, admission_mode="teleport"))
+    with pytest.raises(ValueError):
+        sim.simulate(reqs, policy=BatchingPolicy(
+            mode="static", admission_watermark=0.5))
+
+
+# ---------------------------------------------------------------------------
+# windowed metrics
+# ---------------------------------------------------------------------------
+
+def _rec(rid, arrival, first, finish, gen=4):
+    from repro.core.batching import RequestRecord
+    return RequestRecord(rid=rid, arrival=arrival, context_len=8,
+                         gen_len=gen, first_token_time=first,
+                         finish_time=finish)
+
+
+def test_windowed_metrics_hand_computed():
+    recs = [_rec(0, 0.5, 1.0, 2.5),     # arrives w0, finishes w0
+            _rec(1, 2.0, 3.5, 7.0),     # arrives w0, finishes w1
+            _rec(2, 6.5, 8.0, 9.0)]     # arrives w1, finishes last w
+    ws = windowed_metrics(recs, window_s=4.0, horizon=9.0)
+    assert len(ws) == 3
+    assert [w.arrivals for w in ws] == [2, 1, 0]
+    assert [w.finished for w in ws] == [1, 1, 1]
+    assert ws[0].ttft_mean == pytest.approx(0.5)    # 1.0 - 0.5
+    assert sum(w.arrivals for w in ws) == len(recs)
+    assert sum(w.finished for w in ws) == len(recs)
+
+
+def test_windowed_metrics_explicit_boundaries_and_validation():
+    recs = [_rec(0, 0.5, 1.0, 2.5)]
+    ws = windowed_metrics(recs, boundaries=[0.0, 2.0], horizon=3.0)
+    assert [(w.start, w.end) for w in ws] == [(0.0, 2.0), (2.0, 3.0)]
+    with pytest.raises(ValueError):
+        windowed_metrics(recs)                       # neither knob
+    with pytest.raises(ValueError):
+        windowed_metrics(recs, window_s=1.0, boundaries=[0.0])
+    with pytest.raises(ValueError):
+        windowed_metrics(recs, boundaries=[1.0, 2.0])  # no t=0
+
+
+# ---------------------------------------------------------------------------
+# epoch schedules
+# ---------------------------------------------------------------------------
+
+def test_epoch_schedule_validation_and_collapse():
+    s = EpochSchedule(epochs=((0.0, 1), (2.0, 1), (4.0, 0)))
+    assert s.epochs == ((0.0, 1), (4.0, 0))         # same-plan collapsed
+    assert s.num_switches == 1
+    assert s.plan_at(3.9) == 1 and s.plan_at(4.0) == 0
+    assert EpochSchedule.static(2).is_static
+    with pytest.raises(ValueError):
+        EpochSchedule(epochs=())
+    with pytest.raises(ValueError):
+        EpochSchedule(epochs=((1.0, 0),))            # must start at 0
+    with pytest.raises(ValueError):
+        EpochSchedule(epochs=((0.0, 0), (0.0, 1)))   # not increasing
+
+
+def test_reactive_schedule_is_causal():
+    reqs = get_trace(
+        "summarization", num_requests=140, seed=3,
+        arrival_rate=PiecewiseRate(starts=(0.0, 4.0, 6.0),
+                                   rates=(2.0, 60.0, 2.0)))
+    horizon = max(r.arrival for r in reqs)
+    s = reactive_schedule(reqs, epoch_s=2.0, horizon_s=horizon,
+                          lo_plan=0, hi_plan=1)
+    # the burst lives in [4, 6); a lag-1 controller reacts one epoch
+    # late — hi during [6, 8), never during the burst itself
+    assert s.plan_at(5.0) == 0
+    assert s.plan_at(7.0) == 1
+    assert s.plan_at(9.0) == 0
+    with pytest.raises(ValueError):
+        reactive_schedule(reqs, epoch_s=2.0, horizon_s=horizon,
+                          lo_plan=0, hi_plan=1, lag=0)
+
+
+def test_fault_schedule_from_windows():
+    fs = FaultSchedule(replica_faults=(
+        ReplicaFault(pool="serve", replica=0, start=3.0, repair=5.0),))
+    s = fault_schedule(fs, horizon_s=10.0, primary=0, fallback=1)
+    assert s.epochs == ((0.0, 0), (3.0, 1), (5.0, 0))
+
+
+# ---------------------------------------------------------------------------
+# the dynamic controller
+# ---------------------------------------------------------------------------
+
+def _nonstat_trace(n=60):
+    return get_trace(
+        "summarization", num_requests=n, seed=3,
+        arrival_rate=PiecewiseRate(starts=(0.0, 1.0),
+                                   rates=(30.0, 60.0)))
+
+
+def _rec_tuple(records):
+    return sorted((r.rid, r.first_token_time, r.finish_time,
+                   r.preemptions, r.refetch_s) for r in records)
+
+
+@pytest.mark.parametrize("mechanism", ["drain", "migrate"])
+def test_static_schedule_matches_plain_simulator(search, cands, mechanism):
+    candidates, kv = cands
+    reqs = _nonstat_trace()
+    dyn = DynamicPlanSimulator(search, candidates, EpochSchedule.static(0),
+                               kv_model=kv, mechanism=mechanism)
+    rep_d = dyn.simulate(reqs, keep_records=True)
+    _, sim = search.make_simulator(candidates[0], kv)
+    rep_s = sim.simulate(reqs, keep_records=True)
+    assert _rec_tuple(rep_d.records) == _rec_tuple(rep_s.records)
+    assert rep_d.reconfig.num_switches == 0
+    assert rep_d.total_energy == pytest.approx(rep_s.total_energy)
+
+
+@pytest.mark.parametrize("mechanism", ["drain", "migrate"])
+def test_switching_conserves_requests_and_bills_reconfig(
+        search, cands, mechanism):
+    candidates, kv = cands
+    reqs = _nonstat_trace()
+    sched = EpochSchedule(epochs=((0.0, 0), (1.0, 3)))
+    dyn = DynamicPlanSimulator(search, candidates, sched, kv_model=kv,
+                               mechanism=mechanism)
+    rep = dyn.simulate(reqs, keep_records=True)
+    assert len(rep.records) == len(reqs)             # nobody lost
+    for r in rep.records:
+        assert r.finish_time > r.first_token_time > r.arrival >= 0.0
+    assert rep.reconfig.num_switches == 1
+    sw = rep.reconfig.switches[0]
+    assert sw.reshard_s > 0 and sw.reshard_bytes > 0
+    if mechanism == "migrate":
+        assert sw.migrated > 0 and sw.migrate_s > 0   # busy boundary
+        assert sw.drained == 0
+    else:
+        assert sw.migrated == 0
+    assert rep.windows is not None and len(rep.windows) == 2
+    assert sum(w.arrivals for w in rep.windows) == len(reqs)
+
+
+def test_dynamic_validation(search, cands):
+    candidates, kv = cands
+    with pytest.raises(ValueError):
+        DynamicPlanSimulator(search, candidates, EpochSchedule.static(0),
+                             mechanism="teleport")
+    with pytest.raises(ValueError):
+        DynamicPlanSimulator(
+            search, candidates,
+            EpochSchedule(epochs=((0.0, 0), (1.0, len(candidates)))))
+    fake_disagg = [("disagg", candidates[0][1], None)]
+    with pytest.raises(ValueError):
+        DynamicPlanSimulator(search, fake_disagg, EpochSchedule.static(0),
+                             mechanism="migrate")
+    dyn = DynamicPlanSimulator(search, candidates,
+                               EpochSchedule(epochs=((0.0, 0), (1.0, 1))),
+                               kv_model=kv, mechanism="migrate")
+    fs = FaultSchedule(replica_faults=(
+        ReplicaFault(pool="serve", replica=0, start=0.5, repair=1.5),))
+    with pytest.raises(ValueError):
+        dyn.simulate(_nonstat_trace(12), faults=fs)
+
+
+def test_engine_epoch_stop_and_boundary_union():
+    eng = Engine()
+    eng.fault_times = [4.0]
+    eng.install_epoch(2.0, lambda t: eng.stop())
+    assert eng.next_boundary(0.0) == 2.0
+    assert eng.next_boundary(2.0) == 4.0             # union with faults
+    assert eng.fault_bound(0.0) == 2.0               # PR-9 alias intact
+
+
+# ---------------------------------------------------------------------------
+# search integration
+# ---------------------------------------------------------------------------
+
+def test_empty_dynamic_spec_bit_identical_to_none(search):
+    reqs = _nonstat_trace(48)
+    kw = dict(objective="goodput", slo_ttft_s=0.5, slo_tpot_s=0.2)
+    a = search.search(reqs, **kw)
+    b = search.search(reqs, dynamic=DynamicSpec(), **kw)
+    assert [dataclasses.asdict(r) for r in a.all_reports] == \
+           [dataclasses.asdict(r) for r in b.all_reports]
+    assert a.best.plan_label == b.best.plan_label
+
+
+def test_search_dynamic_adds_reconfig_candidates(search):
+    reqs = _nonstat_trace(48)
+    spec = DynamicSpec(
+        top_k=2, mechanism="drain",
+        schedules=(EpochSchedule(epochs=((0.0, 0), (1.0, 1))),
+                   EpochSchedule(epochs=((0.0, 1), (1.0, 0)))))
+    res = search.search(reqs, objective="goodput", slo_ttft_s=0.5,
+                        slo_tpot_s=0.2, dynamic=spec)
+    dyn = [r for r in res.all_reports if r.reconfig is not None]
+    assert len(dyn) == 2
+    assert res.num_schemes == 49 + 2
+    for r in dyn:
+        assert r.plan_label.startswith("dyn-drain[")
+        assert r.reconfig.num_switches == 1
+        assert r.reconfig.total_reshard_s > 0
+    # best is picked over the union under the same objective
+    assert res.best.goodput_rps == max(
+        r.goodput_rps for r in res.all_reports if res.admissible(r))
+
+
+def test_build_schedules_drops_static_and_validates():
+    reqs = _nonstat_trace(48)
+    spec = DynamicSpec(schedules=(EpochSchedule.static(0),
+                                  EpochSchedule(epochs=((0.0, 0),
+                                                        (1.0, 1)))))
+    out = build_schedules(spec, reqs, 2.0, k=2)
+    assert len(out) == 1                             # static dropped
+    bad = DynamicSpec(schedules=(EpochSchedule(epochs=((0.0, 0),
+                                                       (1.0, 5))),))
+    with pytest.raises(ValueError):
+        build_schedules(bad, reqs, 2.0, k=2)
+    with pytest.raises(ValueError):
+        DynamicSpec(top_k=0)
+    with pytest.raises(ValueError):
+        DynamicSpec(mechanism="teleport")
+
+
+# ---------------------------------------------------------------------------
+# fluid guard
+# ---------------------------------------------------------------------------
+
+def test_trace_summary_nonstationarity_scores():
+    stat = get_trace("summarization", arrival_rate=16.0, seed=3,
+                     num_requests=48)
+    assert TraceSummary.of(stat).nonstationarity < 6.0
+    ns = get_trace("summarization", seed=3, num_requests=48,
+                   arrival_rate=PiecewiseRate(starts=(0.0, 2.0),
+                                              rates=(2.0, 80.0)))
+    ts = TraceSummary.of(ns)
+    assert ts.nonstationarity > 6.0
+    assert ts.peak_rate > ts.arrival_rate
+
+
+def test_multifid_refuses_nonstationary_by_default(search):
+    ns = get_trace("summarization", seed=3, num_requests=48,
+                   arrival_rate=PiecewiseRate(starts=(0.0, 2.0),
+                                              rates=(2.0, 80.0)))
+    mf = MultiFidelitySearch(search, frontier_k=4)
+    with pytest.raises(ValueError, match="non-stationary"):
+        mf.search(ns, objective="goodput")
+    with pytest.raises(ValueError):
+        mf.search(ns, objective="goodput", nonstationary="sideways")
+    r = mf.search(ns, objective="goodput", nonstationary="peak")
+    assert r.best.feasible
+    r2 = mf.search(ns, objective="goodput", nonstationary="ignore")
+    assert r2.best.feasible
